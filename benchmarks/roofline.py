@@ -1,0 +1,104 @@
+"""Roofline table from the dry-run sweep results (§Roofline deliverable).
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun_all)
+and emits, per (arch x shape) on the single-pod mesh: the three roofline
+terms in seconds, the dominant bottleneck, MODEL_FLOPS / HLO_FLOPs, and a
+what-would-move-it-down note. Markdown + CSV output.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "zamba2-7b", "phi-3-vision-4.2b", "qwen3-0.6b", "deepseek-v2-lite-16b",
+    "qwen2-moe-a2.7b", "smollm-135m", "xlstm-1.3b", "whisper-medium",
+    "qwen1.5-0.5b", "qwen1.5-110b",
+]
+
+ADVICE = {
+    "compute": "raise per-chip utilisation: larger per-device batch/seq "
+               "tiles, MXU-aligned (128) dims, fuse small matmuls",
+    "memory": "cut HBM round-trips: flash-attention kernel (S x S scores "
+              "stay in VMEM), bf16 intermediates, wider fusion",
+    "collective": "reshard: move gathers off the critical path "
+                  "(overlap), reduce-scatter grads, 2D-shard weights, "
+                  "shard_map the MoE dispatch",
+}
+
+
+def load(results_dir, mesh="single"):
+    out = {}
+    for f in glob.glob(os.path.join(results_dir, f"*_{mesh}.json")):
+        r = json.load(open(f))
+        if r.get("ok"):
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.2f}ms"
+
+
+def table(recs, mesh="single"):
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if not r:
+                continue
+            rl = r["roofline"]
+            rows.append({
+                "arch": arch, "shape": shape,
+                "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"],
+                "bottleneck": rl["bottleneck"],
+                "model_flops_dev": r["model_flops_per_device"],
+                "hlo_flops_dev": r["flops"],
+                "useful_ratio": r["useful_flop_ratio"],
+                "coll_bytes": r["collectives"]["total_bytes"],
+                "params": r["params_total"],
+                "advice": ADVICE[rl["bottleneck"]],
+            })
+    return rows
+
+
+def print_markdown(rows):
+    print("| arch | shape | compute | memory | collective | bottleneck "
+          "| useful FLOP ratio |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} "
+              f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+              f"| {r['bottleneck']} | {r['useful_ratio']:.3f} |")
+
+
+def print_csv(rows):
+    cols = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+            "bottleneck", "useful_ratio", "coll_bytes", "params"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="benchmarks/results/dryrun")
+    ap.add_argument("--format", choices=["md", "csv"], default="md")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.results, args.mesh)
+    rows = table(recs, args.mesh)
+    if args.format == "md":
+        print_markdown(rows)
+    else:
+        print_csv(rows)
+
+
+if __name__ == "__main__":
+    main()

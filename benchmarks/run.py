@@ -1,0 +1,102 @@
+"""Benchmark gate: one section per paper table/figure + kernel microbench +
+roofline summary. Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+--full runs paper-sized experiments (slow); default is the fast CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _time_us(fn, warmup=1, iters=3):
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_micro():
+    import jax
+    import jax.numpy as jnp  # noqa: F401
+    from repro.kernels import fedavg_aggregate, flash_attention, ssd_scan
+    k = jax.random.PRNGKey(0)
+    rows = []
+    q = jax.random.normal(k, (1, 4, 256, 64))
+    kk = jax.random.normal(k, (1, 2, 256, 64))
+    v = jax.random.normal(k, (1, 2, 256, 64))
+    us = _time_us(lambda: flash_attention(q, kk, v))
+    rows.append(("kernel_flash_attention_256", us, "interpret=True"))
+    x = jax.random.normal(k, (1, 2, 256, 32))
+    a = -jax.nn.softplus(jax.random.normal(k, (1, 2, 256)))
+    b = 0.3 * jax.random.normal(k, (1, 2, 256, 16))
+    us = _time_us(lambda: ssd_scan(x, a, b, b, chunk=64))
+    rows.append(("kernel_ssd_scan_256", us, "interpret=True"))
+    st = jax.random.normal(k, (16, 100_000))
+    w = jax.nn.softmax(jax.random.normal(k, (16,)))
+    us = _time_us(lambda: fedavg_aggregate(st, w))
+    rows.append(("kernel_fedavg_16x100k", us, "interpret=True"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized experiment runs (slow)")
+    ap.add_argument("--skip-experiments", action="store_true")
+    args = ap.parse_args()
+    fast = not args.full
+    rows = []
+
+    from benchmarks import experiments as E
+
+    if not args.skip_experiments:
+        specs = [
+            ("exp1_difficulty_fig2", E.exp1_difficulty),
+            ("exp2_task_count_fig3", E.exp2_task_count),
+            ("exp3_client_count_fig4", E.exp3_client_count),
+            ("exp4_auctions_fig5ab", E.exp4_auctions),
+            ("exp5_auction_learning_fig5c", E.exp5_auction_learning),
+            ("exp6_alpha_sweep_techreport", E.exp6_alpha_sweep),
+            ("exp7_stragglers_extension", E.exp7_stragglers),
+            ("exp8_tau_sweep_extension", E.exp8_tau_sweep),
+        ]
+        for name, fn in specs:
+            t0 = time.perf_counter()
+            result = fn(fast=fast)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((name, us, json.dumps(result, sort_keys=True)))
+            print(f"# {name}: {json.dumps(result, sort_keys=True)[:220]}",
+                  file=sys.stderr)
+
+    rows.extend(kernel_micro())
+
+    # roofline summary from the dry-run sweep, if present
+    try:
+        from benchmarks.roofline import load, table
+        recs = load("benchmarks/results/dryrun")
+        tab = table(recs)
+        if tab:
+            n_coll = sum(1 for r in tab if r["bottleneck"] == "collective")
+            n_mem = sum(1 for r in tab if r["bottleneck"] == "memory")
+            rows.append(("roofline_pairs", 0.0,
+                         f"pairs={len(tab)};collective_bound={n_coll};"
+                         f"memory_bound={n_mem}"))
+    except Exception as e:  # noqa: BLE001
+        rows.append(("roofline_pairs", 0.0, f"unavailable:{e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        d = str(derived).replace(",", ";")
+        print(f"{name},{us:.1f},{d}")
+
+
+if __name__ == "__main__":
+    main()

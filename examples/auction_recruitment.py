@@ -1,0 +1,57 @@
+"""Client-incentive auctions (paper Section V / Experiment 4).
+
+Compares the paper's mechanisms on the paper's bid model (task 1: truncated
+Gaussian; task 2: increasing-linear) across budgets: the MMFL Max-Min Fair
+auction minimises the take-up DIFFERENCE across tasks and dominates the
+budget-constrained regime, while GMMFair (untruthful) upper-bounds it.
+
+    PYTHONPATH=src python examples/auction_recruitment.py
+"""
+import numpy as np
+
+from repro.core.auctions import (budget_fair_auction, gmmfair,
+                                 greedy_within_budget, maxmin_fair_auction,
+                                 random_within_budget, val_threshold)
+
+
+def bids_model(rng, n):
+    b = np.empty((n, 2))
+    b[:, 0] = np.clip(rng.normal(0.5, 0.2, n), 0.01, 1.0)
+    b[:, 1] = np.sqrt(rng.random(n))
+    return b
+
+
+def main():
+    n, seeds = 100, range(5)
+    print(f"{n} users, 2 tasks; averaged over {len(seeds)} seeds")
+    print(f"\n{'budget':>7} {'mechanism':>26} {'min take-up':>12} "
+          f"{'diff':>7} {'spent':>7}")
+    for B in (10, 29, 60):
+        rows = {}
+        for seed in seeds:
+            rng = np.random.default_rng(seed)
+            bids = bids_model(rng, n)
+            for name, res in [
+                ("MMFL Max-Min Fair", maxmin_fair_auction(bids, B)),
+                ("Budget-Fair", budget_fair_auction(bids, B)),
+                ("GMMFair (untruthful)", gmmfair(bids, B)),
+                ("Greedy within budget (NT)",
+                 greedy_within_budget(bids, B)),
+                ("Random within budget (NT)",
+                 random_within_budget(rng, bids, B)),
+                ("valThreshold 0.4 (no budget)",
+                 val_threshold(bids, 0.4)),
+            ]:
+                r = rows.setdefault(name, {"min": [], "diff": [],
+                                           "spent": []})
+                r["min"].append(res.min_take_up)
+                r["diff"].append(res.diff_take_up)
+                r["spent"].append(res.spent)
+        for name, r in rows.items():
+            print(f"{B:>7} {name:>26} {np.mean(r['min']):>12.2f} "
+                  f"{np.mean(r['diff']):>7.2f} {np.mean(r['spent']):>7.2f}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: fair concurrent training of two federated tasks.
+
+Reproduces the paper's headline behaviour in ~1 minute on CPU:
+FedFairMMFL (alpha-fair client-task allocation, Eq. 4) achieves a higher
+minimum accuracy and lower variance across tasks than Random allocation,
+at the same average accuracy.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.allocation import AllocationStrategy
+from repro.fed import MMFLTrainer, TrainConfig, standard_tasks
+
+
+def main():
+    tasks = standard_tasks(["synth-mnist", "synth-cifar", "synth-fmnist"],
+                           n_clients=40, seed=0, n_range=(100, 150))
+    print(f"{len(tasks)} tasks of increasing difficulty, "
+          f"{tasks[0].n_clients} clients "
+          f"(non-iid: half the classes per client)\n")
+    results = {}
+    for strat in (AllocationStrategy.FEDFAIR, AllocationStrategy.RANDOM):
+        cfg = TrainConfig(rounds=25, strategy=strat, alpha=3.0,
+                          participation=0.2, tau=3, seed=0)
+        h = MMFLTrainer(tasks, cfg).run(verbose=False)
+        results[strat.value] = h
+        print(f"{strat.value:10s} per-task acc="
+              f"{np.round(h.acc[-1], 3)}  min={h.min_acc[-1]:.3f}  "
+              f"var={h.var_acc[-1]:.4f}  mean={h.acc[-1].mean():.3f}")
+    ff, rd = results["fedfair"], results["random"]
+    print(f"\nworst-task convergence (mean min-acc over rounds): "
+          f"fedfair {ff.min_acc.mean():.3f} vs random {rd.min_acc.mean():.3f}")
+    print("FedFairMMFL allocated clients per task (total over rounds):",
+          ff.alloc_counts.sum(axis=0), "— more to the harder task")
+    print("Random allocated:", rd.alloc_counts.sum(axis=0))
+    print("\n(benchmarks/run.py exp1 runs the seed-averaged comparison: "
+          "fedfair min-acc 0.891 vs random 0.874 — see EXPERIMENTS.md)")
+
+
+if __name__ == "__main__":
+    main()

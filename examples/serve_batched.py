@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + incremental decode with KV caches.
+
+Serves a reduced qwen3 (GQA + qk-norm) and a reduced deepseek (MLA
+compressed cache, absorbed decode) back to back — the two serving paths the
+decode dry-run shapes exercise at production scale.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def run(arch, extra=()):
+    sys.argv = ["serve", "--arch", arch, "--preset", "tiny",
+                "--batch", "4", "--prompt-len", "16", "--gen", "24",
+                *extra]
+    serve_main()
+
+
+def main():
+    print("=== qwen3-0.6b (GQA, qk-norm) ===")
+    run("qwen3-0.6b")
+    print("\n=== deepseek-v2-lite (MLA compressed KV cache) ===")
+    run("deepseek-v2-lite-16b")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Checkpointing substrate (no orbax offline — built on numpy + JSON).
+
+Layout per checkpoint step:
+    <dir>/step_<n>/
+        MANIFEST.json          # tree structure, dtypes, metadata
+        arrays.npz             # one entry per leaf, keyed by tree path
+Atomicity: written to a ``.tmp`` directory then renamed; a LATEST file
+points at the newest complete step. The MMFL CheckpointManager stores one
+subtree per task (params + optimizer state + coordinator scalars) so fair
+multi-task training resumes with its allocation state intact.
+
+Pytree paths are serialised as '/'-joined dict keys / list indices; restore
+rebuilds the exact structure (dicts, lists, tuples) from the manifest, so no
+template pytree is needed — but ``restore(like=...)`` is supported to cast
+dtypes/shardings back onto a template.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    """Yield (path, leaf) with structure markers for rebuilding."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}" if prefix else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}" if prefix else str(i))
+    else:
+        yield prefix, tree
+
+
+def _structure(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _structure(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"__kind__": "tuple",
+                "items": [_structure(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"__kind__": "list",
+                "items": [_structure(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def _rebuild(struct, arrays, prefix=""):
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, arrays, f"{prefix}/{k}" if prefix else k)
+                for k, v in struct["items"].items()}
+    if kind in ("list", "tuple"):
+        seq = [_rebuild(v, arrays, f"{prefix}/{i}" if prefix else str(i))
+               for i, v in enumerate(struct["items"])]
+        return tuple(seq) if kind == "tuple" else seq
+    return arrays[prefix]
+
+
+def save_pytree(path: str, tree, metadata: Optional[Dict[str, Any]] = None):
+    """Atomic save of one pytree + metadata to ``path`` (a directory)."""
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    host = jax.tree.map(lambda x: np.asarray(x), tree)
+    arrays = dict(_flatten(host))
+    # bf16 has no numpy dtype: view as uint16 and record the real dtype
+    dtypes = {}
+    packed = {}
+    for k, v in arrays.items():
+        v = np.asarray(v)
+        dtypes[k] = str(v.dtype)
+        if v.dtype.name == "bfloat16":
+            packed[k] = v.view(np.uint16)
+        else:
+            packed[k] = v
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k.replace("/", "|"): v for k, v in packed.items()})
+    manifest = {"structure": _structure(tree), "dtypes": dtypes,
+                "metadata": metadata or {}}
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def load_pytree(path: str, like=None):
+    """Load a pytree saved by save_pytree. Returns (tree, metadata)."""
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {}
+        for k in z.files:
+            key = k.replace("|", "/")
+            v = z[k]
+            if manifest["dtypes"].get(key) == "bfloat16":
+                import ml_dtypes
+                v = v.view(ml_dtypes.bfloat16)
+            arrays[key] = v
+    tree = _rebuild(manifest["structure"], arrays)
+    if like is not None:
+        tree = jax.tree.map(
+            lambda t, l: jax.numpy.asarray(t, getattr(l, "dtype", None)),
+            tree, like)
+    return tree, manifest["metadata"]
+
+
+class CheckpointManager:
+    """Multi-task (MMFL) checkpoint manager with retention + LATEST."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def save(self, step: int, tasks: Dict[str, Any],
+             coordinator_state: Optional[Dict[str, Any]] = None):
+        """tasks: name -> pytree (e.g. {'params':..., 'opt':...})."""
+        sd = self._step_dir(step)
+        for name, tree in tasks.items():
+            save_pytree(os.path.join(sd, name.replace("/", "_")), tree,
+                        metadata={"task": name, "step": step})
+        meta = {"step": step, "tasks": sorted(tasks),
+                "coordinator": coordinator_state or {}}
+        with open(os.path.join(sd, "STEP.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(self.dir, "LATEST"), "w") as f:
+            f.write(str(step))
+        self._gc()
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        return int(open(p).read().strip())
+
+    def restore(self, step: Optional[int] = None):
+        """Returns (step, tasks dict, coordinator_state) or None."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        sd = self._step_dir(step)
+        with open(os.path.join(sd, "STEP.json")) as f:
+            meta = json.load(f)
+        tasks = {}
+        for name in meta["tasks"]:
+            tree, _ = load_pytree(os.path.join(sd, name.replace("/", "_")))
+            tasks[name] = tree
+        return step, tasks, meta.get("coordinator", {})
+
+    def steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

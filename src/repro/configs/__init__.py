@@ -1,0 +1,34 @@
+"""Config registry: importing this package registers all assigned archs."""
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    list_archs,
+    smoke_config,
+)
+from repro.configs import (  # noqa: F401
+    zamba2_7b,
+    phi3_vision_4_2b,
+    qwen3_0_6b,
+    deepseek_v2_lite_16b,
+    qwen2_moe_a2_7b,
+    smollm_135m,
+    xlstm_1_3b,
+    whisper_medium,
+    qwen1_5_0_5b,
+    qwen1_5_110b,
+)
+
+ASSIGNED_ARCHS = (
+    "zamba2-7b",
+    "phi-3-vision-4.2b",
+    "qwen3-0.6b",
+    "deepseek-v2-lite-16b",
+    "qwen2-moe-a2.7b",
+    "smollm-135m",
+    "xlstm-1.3b",
+    "whisper-medium",
+    "qwen1.5-0.5b",
+    "qwen1.5-110b",
+)

@@ -1,0 +1,24 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini decoder + CLIP frontend (stub).
+
+32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064.
+[hf:microsoft/Phi-3-vision-128k-instruct] The vision encoder + projector is
+a STUB per the assignment carve-out: input_specs() supplies precomputed
+patch embeddings (B, 256, d_model) concatenated ahead of the text tokens.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("phi-3-vision-4.2b")
+def phi3_vision() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b",
+        arch_type="vlm",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+        n_img_tokens=256,
+        rope_theta=10_000.0,
+    )

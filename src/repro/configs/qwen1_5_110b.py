@@ -1,0 +1,22 @@
+"""qwen1.5-110b [dense] — QKV bias, GQA kv=8.
+
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064.
+[hf:Qwen/Qwen1.5-0.5B (family card); 110B dims per assignment]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen1.5-110b")
+def qwen1_5_110b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-110b",
+        arch_type="dense",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=49152,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+    )

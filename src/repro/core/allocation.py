@@ -1,0 +1,75 @@
+"""FedFairMMFL client-task allocation (paper Alg. 1, Eq. 4) + baselines.
+
+Each round, every ACTIVE client is independently assigned task s with
+probability
+    p_s = f_s^(alpha-1) / sum_s' f_s'^(alpha-1)          (Eq. 4)
+where f_s is task s's prevailing global loss (the paper's experiments use
+1 - test_accuracy). alpha=1 -> uniform (the paper's "Random" baseline);
+alpha -> inf -> all clients to the worst task (max-min). The scheme is
+unbiased across clients: every client has the same task distribution.
+
+Everything here is jit-friendly (pure jnp + jax.random), so the allocator
+can live inside a compiled MMFL round on the production mesh.
+"""
+from __future__ import annotations
+
+from enum import Enum
+
+import jax
+import jax.numpy as jnp
+
+
+class AllocationStrategy(str, Enum):
+    FEDFAIR = "fedfair"          # alpha-fair (Eq. 4)
+    RANDOM = "random"            # uniform (== alpha=1)
+    ROUND_ROBIN = "round_robin"  # Bhuyan & Moharir baseline
+
+
+def alpha_fair_probs(losses, alpha):
+    """Eq. 4. losses: (S,) positive; returns (S,) probabilities.
+
+    Computed in log-space for numerical stability at large alpha.
+    """
+    losses = jnp.asarray(losses, jnp.float32)
+    logf = jnp.log(jnp.maximum(losses, 1e-12)) * (alpha - 1.0)
+    return jax.nn.softmax(logf)
+
+
+def allocate_fedfair(key, losses, n_clients, alpha):
+    """Sample a task id per client (iid categorical per Eq. 4)."""
+    p = alpha_fair_probs(losses, alpha)
+    return jax.random.categorical(
+        key, jnp.log(jnp.maximum(p, 1e-12)), shape=(n_clients,))
+
+
+def allocate_random(key, n_tasks, n_clients):
+    return jax.random.randint(key, (n_clients,), 0, n_tasks)
+
+
+def allocate_round_robin(round_idx, n_tasks, n_clients, key=None):
+    """Active clients are assigned tasks sequentially; the offset rotates
+    across rounds so each task sees every client position over time."""
+    base = (jnp.arange(n_clients) + round_idx) % n_tasks
+    if key is not None:  # randomise which physical client gets which slot
+        base = jax.random.permutation(key, base)
+    return base
+
+
+def allocate(key, strategy, losses, n_clients, alpha=3.0, round_idx=0):
+    """Dispatch. losses: (S,). Returns (n_clients,) int32 task ids."""
+    n_tasks = losses.shape[0]
+    if strategy == AllocationStrategy.FEDFAIR:
+        return allocate_fedfair(key, losses, n_clients, alpha)
+    if strategy == AllocationStrategy.RANDOM:
+        return allocate_random(key, n_tasks, n_clients)
+    if strategy == AllocationStrategy.ROUND_ROBIN:
+        return allocate_round_robin(round_idx, n_tasks, n_clients, key)
+    raise ValueError(strategy)
+
+
+def selection_probability(losses, alpha, n_selected, n_clients):
+    """B_Sel^s(alpha) (Eq. 7): probability that a specific |Sel|-subset is
+    allocated to task s. Used by theory.py's convergence-bound terms."""
+    p = alpha_fair_probs(losses, alpha + 1.0)  # Eq. 7 uses f^alpha
+    return (p[:, None] ** n_selected
+            * (1 - p[:, None]) ** (n_clients - n_selected))

@@ -1,0 +1,34 @@
+"""Fairness metrics over task performance (paper Section IV-A, Section VI).
+
+The paper's headline metrics: minimum test accuracy across tasks, variance
+of task accuracies (Lemma 1), and cosine-similarity-style uniformity
+(Lemma 2). The alpha-fair objective (Eq. 2) is included for monitoring.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def alpha_fair_objective(losses, alpha):
+    """g^alpha = sum_s f_s^alpha (Eq. 2)."""
+    losses = jnp.asarray(losses, jnp.float32)
+    return jnp.sum(jnp.maximum(losses, 1e-12) ** alpha)
+
+
+def cosine_uniformity(values):
+    """cos(values, 1) = mean / rms — 1.0 iff perfectly uniform (Lemma 2)."""
+    v = np.asarray(values, np.float64)
+    rms = np.sqrt(np.mean(v ** 2))
+    return float(np.mean(v) / max(rms, 1e-12))
+
+
+def fairness_report(accuracies) -> dict:
+    a = np.asarray(accuracies, np.float64)
+    return {
+        "min_acc": float(a.min()),
+        "max_acc": float(a.max()),
+        "mean_acc": float(a.mean()),
+        "var_acc": float(a.var()),
+        "cosine_uniformity": cosine_uniformity(a),
+    }

@@ -1,0 +1,101 @@
+"""MMFL coordinator: the production-scale face of FedFairMMFL.
+
+At datacenter scale the "clients" are data silos whose shards map onto the
+mesh's data axis, and each MMFL "task" is one of the registered
+architectures with its own sharded train_step. The coordinator holds the
+per-task prevailing loss, produces the alpha-fair per-round allocation
+(Eq. 4) and the p_k aggregation weights that the per-task weighted-loss
+train step consumes (tau=1 local steps == weighted gradient aggregation;
+tau>1 goes through fed.client).
+
+Everything the coordinator computes is O(S + K) scalars per round — it
+never touches tensors, so it composes with any sharded runtime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.allocation import AllocationStrategy, alpha_fair_probs
+
+
+@dataclass
+class TaskState:
+    name: str
+    loss: float = float("inf")
+    rounds_trained: int = 0
+    clients_last_round: int = 0
+
+
+@dataclass
+class MMFLCoordinator:
+    task_names: List[str]
+    n_clients: int
+    alpha: float = 3.0
+    strategy: AllocationStrategy = AllocationStrategy.FEDFAIR
+    participation: float = 1.0
+    seed: int = 0
+    eligibility: Optional[np.ndarray] = None      # (K, S) auction outcome
+    _round: int = 0
+    tasks: Dict[str, TaskState] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.tasks = {n: TaskState(n) for n in self.task_names}
+        self._rng = np.random.default_rng(self.seed)
+        if self.eligibility is None:
+            self.eligibility = np.ones(
+                (self.n_clients, len(self.task_names)), bool)
+
+    @property
+    def losses(self) -> np.ndarray:
+        return np.array([max(self.tasks[n].loss, 1e-6)
+                         for n in self.task_names])
+
+    def report(self, task: str, loss: float):
+        self.tasks[task].loss = float(loss)
+        self.tasks[task].rounds_trained += 1
+
+    def next_round(self) -> Dict[str, np.ndarray]:
+        """Returns task -> array of client ids allocated this round."""
+        S = len(self.task_names)
+        finite = np.isfinite(self.losses)
+        losses = np.where(finite, self.losses, np.nanmax(
+            np.where(finite, self.losses, np.nan)) if finite.any() else 1.0)
+        if self.strategy == AllocationStrategy.RANDOM or not finite.any():
+            probs = np.ones(S) / S
+        elif self.strategy == AllocationStrategy.ROUND_ROBIN:
+            probs = None
+        else:
+            probs = np.asarray(alpha_fair_probs(losses, self.alpha))
+        m = max(1, int(round(self.participation * self.n_clients)))
+        active = self._rng.choice(self.n_clients, size=m, replace=False)
+        out = {n: [] for n in self.task_names}
+        for j, i in enumerate(active):
+            elig = self.eligibility[i]
+            if not elig.any():
+                continue
+            if probs is None:                        # round robin
+                for off in range(S):
+                    s = (self._round + j + off) % S
+                    if elig[s]:
+                        break
+            else:
+                pe = probs * elig
+                pe = pe / pe.sum()
+                s = self._rng.choice(S, p=pe)
+            out[self.task_names[s]].append(i)
+        self._round += 1
+        for n in self.task_names:
+            self.tasks[n].clients_last_round = len(out[n])
+        return {n: np.array(v, np.int64) for n, v in out.items()}
+
+    def client_weights(self, client_ids: np.ndarray,
+                       p_k: Optional[np.ndarray] = None) -> np.ndarray:
+        """p_{k,Sel} normalised aggregation weights for a batch whose rows
+        are the selected clients' shards."""
+        if p_k is None:
+            p_k = np.ones(self.n_clients) / self.n_clients
+        w = p_k[client_ids]
+        return (w / max(w.sum(), 1e-12)).astype(np.float32)

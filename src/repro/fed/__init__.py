@@ -1,0 +1,2 @@
+from repro.fed.data import FedTask, make_synthetic_task, standard_tasks  # noqa: F401
+from repro.fed.trainer import MMFLTrainer, TrainConfig  # noqa: F401

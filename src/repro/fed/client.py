@@ -1,0 +1,77 @@
+"""Client-side local training: tau SGD steps, vmapped across clients.
+
+The per-task model is a small MLP (the paper's CNN stand-in at synthetic
+scale); everything is pure JAX so a whole-cohort local-update is ONE
+compiled call per (task, round).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, input_dim, hidden, n_classes, depth=2):
+    dims = [input_dim] + [hidden] * (depth - 1) + [n_classes]
+    ks = jax.random.split(key, len(dims) - 1)
+    params = []
+    for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:])):
+        params.append({
+            "w": jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5,
+            "b": jnp.zeros((b,)),
+        })
+    return params
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_loss(params, x, y, w):
+    logits = mlp_apply(params, x)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    nll = logz - gold
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def accuracy(params, x, y):
+    return jnp.mean(jnp.argmax(mlp_apply(params, x), -1) == y)
+
+
+@partial(jax.jit, static_argnames=("tau", "batch_size"))
+def local_update(global_params, key, x, y, w, tau: int, lr,
+                 batch_size: int = 32):
+    """One client: tau SGD steps on minibatches of its local data.
+
+    x: (n, d), y: (n,), w: (n,) sample mask. Returns updated params.
+    """
+    n = x.shape[0]
+
+    def step(params, k):
+        idx = jax.random.randint(k, (batch_size,), 0, n)
+        g = jax.grad(mlp_loss)(params, x[idx], y[idx], w[idx])
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        return params, None
+
+    keys = jax.random.split(key, tau)
+    params, _ = jax.lax.scan(step, global_params, keys)
+    return params
+
+
+@partial(jax.jit, static_argnames=("tau", "batch_size"))
+def cohort_local_update(global_params, key, xs, ys, ws, tau: int, lr,
+                        batch_size: int = 32):
+    """All K clients in parallel from the SAME global params (vmap)."""
+    K = xs.shape[0]
+    keys = jax.random.split(key, K)
+
+    def one(k, x, y, w):
+        return local_update(global_params, k, x, y, w, tau, lr, batch_size)
+
+    return jax.vmap(one)(keys, xs, ys, ws)

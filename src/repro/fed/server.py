@@ -1,0 +1,34 @@
+"""Server-side aggregation (paper Alg. 1 line 12).
+
+w_s <- sum_{k in Sel} p_{k,Sel} * w_{k,s},  p_{k,Sel} = p_k / sum_{Sel} p_k
+Client weights outside Sel are zero, so aggregation is a single weighted
+mean over the stacked cohort — which is exactly what the Pallas
+``fedavg`` kernel computes on TPU (kernels/fedavg.py); the jnp path here is
+its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregate(cohort_params, weights):
+    """cohort_params: pytree with leading K axis; weights: (K,) >= 0.
+
+    Returns the p_k-weighted average. If all weights are zero the previous
+    behaviour is undefined — callers must skip aggregation for tasks with
+    no selected clients.
+    """
+    wsum = jnp.maximum(weights.sum(), 1e-12)
+    norm = weights / wsum
+
+    def avg(leaf):
+        return jnp.tensordot(norm, leaf, axes=(0, 0))
+
+    return jax.tree.map(avg, cohort_params)
+
+
+def selection_weights(alloc, task_id, p_k):
+    """alloc: (K,) task ids; zero out clients not allocated to task_id."""
+    sel = (alloc == task_id).astype(jnp.float32)
+    return sel * p_k

@@ -1,0 +1,155 @@
+"""End-to-end MMFL simulation driver (paper Algorithm 1 + Section V).
+
+Per global round:
+  1. a fraction C of clients is active (uniformly at random);
+  2. the allocator (FedFairMMFL / random / round-robin) assigns each active
+     client to ONE task — restricted to tasks the client committed to via
+     the recruitment auction (eligibility matrix), renormalising Eq. 4 per
+     client over its eligible tasks;
+  3. each task's selected clients run tau local SGD steps from the task's
+     global params (one vmapped compiled call per task);
+  4. the server aggregates with p_k weights and re-evaluates test accuracy,
+     which feeds the next round's allocation (f_s = 1 - acc_s, as in the
+     paper's experiments).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocation import AllocationStrategy, alpha_fair_probs
+from repro.fed.client import accuracy, cohort_local_update, init_mlp
+from repro.fed.data import FedTask
+from repro.fed.server import aggregate
+
+
+@dataclass
+class TrainConfig:
+    rounds: int = 100
+    alpha: float = 3.0
+    participation: float = 0.35
+    tau: int = 5
+    lr: float = 0.1
+    batch_size: int = 32
+    hidden: int = 64
+    depth: int = 2
+    strategy: AllocationStrategy = AllocationStrategy.FEDFAIR
+    seed: int = 0
+    eval_every: int = 1
+    # stragglers: each selected client fails to return its update with this
+    # probability (paper §VII future-work: heterogeneous/stochastic client
+    # resources). Failed clients simply drop out of the round's aggregation.
+    dropout_prob: float = 0.0
+    # "bigger model for the harder task" (paper uses a ResNet for CIFAR):
+    deep_for: tuple = ("synth-cifar",)
+    deep_depth: int = 3
+
+
+@dataclass
+class History:
+    acc: np.ndarray                     # (rounds, S)
+    alloc_counts: np.ndarray            # (rounds, S)
+    min_acc: np.ndarray = field(init=False)
+    var_acc: np.ndarray = field(init=False)
+
+    def __post_init__(self):
+        self.min_acc = self.acc.min(axis=1)
+        self.var_acc = self.acc.var(axis=1)
+
+
+class MMFLTrainer:
+    def __init__(self, tasks: List[FedTask], cfg: TrainConfig,
+                 eligibility: Optional[np.ndarray] = None):
+        self.tasks = tasks
+        self.cfg = cfg
+        self.S = len(tasks)
+        self.K = tasks[0].n_clients
+        assert all(t.n_clients == self.K for t in tasks)
+        # eligibility[i, s]: client i willing to train task s (auction
+        # winners). Default: everyone trains everything (Section III).
+        self.elig = (np.ones((self.K, self.S), bool)
+                     if eligibility is None else eligibility.astype(bool))
+
+    def _init_models(self, key):
+        params = []
+        for s, t in enumerate(self.tasks):
+            base = t.name.split("#")[0]
+            depth = (self.cfg.deep_depth
+                     if base in self.cfg.deep_for else self.cfg.depth)
+            key, k = jax.random.split(key)
+            params.append(init_mlp(k, t.train_x.shape[-1], self.cfg.hidden,
+                                   t.n_classes, depth=depth))
+        return params, key
+
+    def _allocate(self, rng, losses, round_idx):
+        """Per-client task assignment, honouring eligibility."""
+        cfg = self.cfg
+        m = max(1, int(round(cfg.participation * self.K)))
+        active = rng.choice(self.K, size=m, replace=False)
+        alloc = -np.ones(self.K, np.int64)      # -1: idle
+        if cfg.strategy == AllocationStrategy.ROUND_ROBIN:
+            order = rng.permutation(active)
+            nxt = round_idx
+            for i in order:
+                elig = np.where(self.elig[i])[0]
+                if len(elig) == 0:
+                    continue
+                # next task in RR order that i is eligible for
+                for off in range(self.S):
+                    s = (nxt + off) % self.S
+                    if self.elig[i, s]:
+                        alloc[i] = s
+                        nxt = nxt + off + 1
+                        break
+            return alloc
+        if cfg.strategy == AllocationStrategy.RANDOM:
+            p = np.ones(self.S) / self.S
+        else:
+            p = np.asarray(alpha_fair_probs(losses, cfg.alpha))
+        for i in active:
+            pe = p * self.elig[i]
+            tot = pe.sum()
+            if tot <= 0:
+                continue
+            alloc[i] = rng.choice(self.S, p=pe / tot)
+        return alloc
+
+    def run(self, verbose: bool = False) -> History:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        rng = np.random.default_rng(cfg.seed)
+        params, key = self._init_models(key)
+        accs = np.zeros(self.S)
+        for s, t in enumerate(self.tasks):
+            accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
+        acc_hist, alloc_hist = [], []
+        for r in range(cfg.rounds):
+            losses = np.maximum(1.0 - accs, 1e-6)   # paper: use test acc
+            alloc = self._allocate(rng, losses, r)
+            if cfg.dropout_prob > 0:
+                failed = rng.random(self.K) < cfg.dropout_prob
+                alloc = np.where(failed, -1, alloc)
+            counts = np.array([(alloc == s).sum() for s in range(self.S)])
+            for s, t in enumerate(self.tasks):
+                sel = alloc == s
+                if not sel.any():
+                    continue
+                key, k = jax.random.split(key)
+                cohort = cohort_local_update(
+                    params[s], k, jnp.asarray(t.train_x),
+                    jnp.asarray(t.train_y), jnp.asarray(t.train_w),
+                    cfg.tau, cfg.lr, cfg.batch_size)
+                w = jnp.asarray(sel.astype(np.float32) * t.p_k)
+                params[s] = aggregate(cohort, w)
+                accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
+            acc_hist.append(accs.copy())
+            alloc_hist.append(counts)
+            if verbose and (r + 1) % 10 == 0:
+                print(f"  round {r+1:4d} accs="
+                      + " ".join(f"{a:.3f}" for a in accs)
+                      + f" min={accs.min():.3f}")
+        return History(np.array(acc_hist), np.array(alloc_hist))

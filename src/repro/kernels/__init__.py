@@ -1,0 +1,11 @@
+# Kernel layer: compute hot-spots identified by the roofline analysis.
+# flash_attention — removes the S x S score HBM traffic (memory-bound
+#   attention baseline); ssd_scan — chunked Mamba2/mLSTM state passing in
+#   VMEM; fedavg — the MMFL server's weighted multi-client aggregation.
+from repro.kernels.ops import (  # noqa: F401
+    fedavg_aggregate,
+    flash_attention,
+    gated_rmsnorm,
+    rmsnorm,
+    ssd_scan,
+)

@@ -1,0 +1,109 @@
+"""Pallas TPU flash attention (causal, GQA-aware).
+
+Canonical TPU online-softmax pattern: 4-D grid (batch, q_head, q_block,
+kv_block) with the kv axis innermost; running max / denominator / output
+accumulator live in VMEM scratch that persists across kv iterations (TPU
+grids execute sequentially), so the S x S score matrix never leaves VMEM —
+the HBM traffic is exactly Q + K + V + O. This is the kernel-level fix for
+the memory-bound attention baseline identified in EXPERIMENTS.md §Roofline.
+
+Block shapes are MXU-aligned (multiples of 128 on the lane dim; head_dim is
+the minor dim). GQA: q head h reads kv head h // (H // KV) via the BlockSpec
+index map — no KV replication in HBM.
+
+Validated on CPU via interpret=True against kernels/ref.py (the pure-jnp
+oracle); on real TPU hardware set interpret=False (the default in ops.py
+when a TPU backend is present).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, blk_q, blk_k, n_kv_blocks):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                    # (blk_q, hd)
+    k = k_ref[0, 0]                                    # (blk_k, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = iq * blk_q + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 0)
+        k_pos = ik * blk_k + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0, 0],
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "blk_q", "blk_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, blk_q=DEFAULT_BLOCK_Q,
+                           blk_k=DEFAULT_BLOCK_K, interpret=True):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd). Returns (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, blk_q, Sk, blk_k)
+    nq, nk = Sq // blk_q, Sk // blk_k
+    scale = hd ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, blk_q=blk_q,
+        blk_k=blk_k, n_kv_blocks=nk)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, blk_k, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, blk_k, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

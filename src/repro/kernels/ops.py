@@ -1,0 +1,48 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU backends the kernels compile natively (interpret=False); on the CPU
+container they execute via interpret=True, which runs the kernel body in
+Python for correctness validation (see tests/test_kernels.py). The model
+code's pure-jnp paths remain the default for dry-run lowering — the wrappers
+here are the deployment path.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fedavg import fedavg_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import gated_rmsnorm_pallas, rmsnorm_pallas
+from repro.kernels.ssm_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    return flash_attention_pallas(q, k, v, causal=causal, blk_q=blk_q,
+                                  blk_k=blk_k, interpret=not _on_tpu())
+
+
+def ssd_scan(x, a, b, c, *, chunk=128):
+    """Chunked SSD scan; see kernels/ssm_scan.py for the contract."""
+    return ssd_scan_pallas(x, a, b, c, chunk=chunk,
+                           interpret=not _on_tpu())
+
+
+def fedavg_aggregate(stacked, weights, *, blk=2048):
+    """Weighted client-parameter aggregation (MMFL server, Alg. 1 l.12)."""
+    return fedavg_pallas(stacked, weights, blk=blk,
+                         interpret=not _on_tpu())
+
+
+def rmsnorm(x, w, *, eps=1e-6):
+    """Fused RMSNorm (one HBM read + write per activation tile)."""
+    return rmsnorm_pallas(x, w, eps=eps, interpret=not _on_tpu())
+
+
+def gated_rmsnorm(x, z, w, *, eps=1e-6):
+    """Fused rms_norm(x * silu(z)) * w (Mamba2 output gate)."""
+    return gated_rmsnorm_pallas(x, z, w, eps=eps, interpret=not _on_tpu())

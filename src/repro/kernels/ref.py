@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ref_* mirrors the kernel's contract exactly; tests sweep shapes and
+dtypes asserting allclose between kernel (interpret=True on CPU) and oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, causal=True):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd) — plain softmax attention."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * hd ** -0.5
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def ref_ssd(x, a, b, c):
+    """Sequential SSD recurrence. x: (B,H,L,P); a: (B,H,L); b,c: (B,H,L,N).
+
+    h_t = exp(a_t) h_{t-1} + b_t^T x_t ; y_t = c_t h_t.
+    """
+    B, H, L, P = x.shape
+    N = b.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, at, bt, ct = inp
+        h = h * jnp.exp(at)[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), f32)
+    xs = (x.astype(f32).transpose(2, 0, 1, 3), a.astype(f32).transpose(2, 0, 1),
+          b.astype(f32).transpose(2, 0, 1, 3), c.astype(f32).transpose(2, 0, 1, 3))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype)
+
+
+def ref_fedavg(stacked, weights):
+    """stacked: (K, N); weights: (K,) -> (N,)."""
+    return jnp.tensordot(weights.astype(jnp.float32),
+                         stacked.astype(jnp.float32),
+                         axes=(0, 0)).astype(stacked.dtype)
+
+
+def ref_rmsnorm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ref_gated_rmsnorm(x, z, w, eps=1e-6):
+    g = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,87 @@
+"""Pallas TPU chunked SSD scan (Mamba2 / mLSTM state mixing).
+
+Grid (batch, head, chunk) with the chunk axis innermost; the running
+(N x P) state lives in VMEM scratch and persists across chunk iterations
+(TPU grids are sequential), so inter-chunk state never round-trips HBM.
+Per chunk the kernel computes the intra-chunk decay matrix
+L[i,j] = exp(cumsum_a[i] - cumsum_a[j]) (lower-triangular), the diagonal
+contribution (C L-weighted B x), the carry-in contribution (C decay h), and
+the new state — mirroring models/ssm.py::ssd_chunked, which is its oracle
+via kernels/ref.py.
+
+Shapes per (b, h): x (L, P) values (pre-scaled by dt/input-gate),
+a (L,) log-decay <= 0, Bk/Cq (L, N). chunk and N, P should be 128-aligned
+on real hardware; interpret=True relaxes this for CPU validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, chunk):
+    iz = pl.program_id(2)
+
+    @pl.when(iz == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)               # (chunk, P)
+    a = a_ref[0, 0].astype(jnp.float32)               # (chunk,)
+    bk = b_ref[0, 0].astype(jnp.float32)              # (chunk, N)
+    cq = c_ref[0, 0].astype(jnp.float32)              # (chunk, N)
+
+    acs = jnp.cumsum(a)                               # (chunk,)
+    seg = acs[:, None] - acs[None, :]                 # (chunk, chunk)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lm = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    # scores[i,j] = (Cq_i . Bk_j) * L[i,j]  -> y_diag = scores @ x
+    scores = jax.lax.dot_general(cq, bk, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * Lm
+    y_diag = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    h = h_scr[...]                                    # (N, P)
+    y_off = jax.lax.dot_general(cq * jnp.exp(acs)[:, None], h,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: h' = h * exp(acs[-1]) + sum_j exp(acs[-1]-acs_j) Bk_j x_j
+    decay_states = jnp.exp(acs[-1] - acs)             # (chunk,)
+    new_contrib = jax.lax.dot_general(bk * decay_states[:, None], x,
+                                      (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    h_scr[...] = h * jnp.exp(acs[-1]) + new_contrib
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, a, b, c, *, chunk=128, interpret=True):
+    """x: (B, H, L, P); a: (B, H, L); b, c: (B, H, L, N) -> y like x."""
+    B, H, L, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    Z = L // chunk
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, Z),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b_, h_, z: (b_, h_, z, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, z: (b_, h_, z)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b_, h_, z: (b_, h_, z, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b_, h_, z: (b_, h_, z, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P),
+                               lambda b_, h_, z: (b_, h_, z, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)

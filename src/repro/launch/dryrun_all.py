@@ -1,0 +1,100 @@
+"""Driver: run the full (arch x shape x mesh) dry-run sweep.
+
+Each combination runs in its OWN subprocess (the 512-device XLA flag and
+compile-cache state are per-process), writing one JSON per combo into
+benchmarks/results/dryrun/. Already-present results are skipped unless
+--force. Use --jobs for parallelism (compiles are single-threaded-ish).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+ARCHS = [
+    "smollm-135m", "qwen1.5-0.5b", "qwen3-0.6b", "phi-3-vision-4.2b",
+    "whisper-medium", "xlstm-1.3b", "qwen2-moe-a2.7b",
+    "deepseek-v2-lite-16b", "zamba2-7b", "qwen1.5-110b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def result_path(outdir: Path, arch, shape, mesh):
+    return outdir / f"{arch}_{shape}_{mesh}.json"
+
+
+def run_one(outdir: Path, arch, shape, multi_pod, timeout=3600):
+    mesh = "multi" if multi_pod else "single"
+    out = result_path(outdir, arch, shape, mesh)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", str(out)]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        ok = proc.returncode == 0
+        if not ok and not out.exists():
+            out.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh, "ok": False,
+                "error": proc.stderr[-2000:]}))
+    except subprocess.TimeoutExpired:
+        ok = False
+        out.write_text(json.dumps({
+            "arch": arch, "shape": shape, "mesh": mesh, "ok": False,
+            "error": f"timeout after {timeout}s"}))
+    dt = time.time() - t0
+    print(f"[{'OK ' if ok else 'FAIL'}] {arch} x {shape} x {mesh} "
+          f"({dt:.0f}s)", flush=True)
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="benchmarks/results/dryrun")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--archs", default=None, help="comma list")
+    ap.add_argument("--shapes", default=None, help="comma list")
+    args = ap.parse_args()
+    outdir = Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = args.archs.split(",") if args.archs else ARCHS
+    shapes = args.shapes.split(",") if args.shapes else SHAPES
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    work = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh = "multi" if mp else "single"
+                p = result_path(outdir, arch, shape, mesh)
+                if p.exists() and not args.force:
+                    try:
+                        if json.loads(p.read_text()).get("ok"):
+                            continue
+                    except Exception:
+                        pass
+                work.append((arch, shape, mp))
+    print(f"{len(work)} combos to run", flush=True)
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        results = list(ex.map(
+            lambda w: run_one(outdir, *w), work))
+    ok = sum(results)
+    print(f"done: {ok}/{len(work)} ok")
+    if ok < len(work):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

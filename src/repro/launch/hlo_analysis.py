@@ -1,0 +1,383 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+cost_analysis() supplies per-device HLO FLOPs/bytes; collective traffic is
+NOT in cost_analysis, so we parse the post-SPMD HLO text and sum the result
+buffer sizes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute op (async '-start' variants counted once, '-done'
+ignored).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def _legacy_parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition(" = ")
+        # op name is the first token after the result shape annotation
+        m = re.match(r"(\(?[a-z0-9_\[\]\{\},: /]*\)?)\s*([a-z0-9-]+)\(",
+                     rhs)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "")
+        if base not in _COLL_OPS or op.endswith("-done"):
+            continue
+        shape_text = m.group(1)
+        size = sum(_shape_bytes(d, s)
+                   for d, s in _SHAPE_RE.findall(shape_text))
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + size
+        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
+    return stats
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float) -> dict:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    terms["step_time_lower_bound_s"] = max(compute_s, memory_s,
+                                           collective_s)
+    return terms
+
+
+def cost_summary(compiled) -> dict:
+    """Best-effort extraction from compiled.cost_analysis()."""
+    out = {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca:
+            out["flops"] = float(ca.get("flops", 0.0))
+            out["transcendentals"] = float(ca.get("transcendentals", 0.0))
+            out["bytes"] = float(ca.get("bytes accessed", 0.0))
+            for k, v in ca.items():
+                if k.startswith("bytes accessed") and k != "bytes accessed":
+                    out.setdefault("bytes_detail", {})[k] = float(v)
+    except Exception as e:          # pragma: no cover
+        out["cost_analysis_error"] = str(e)
+    return out
+
+
+def memory_summary(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes", "peak_memory_in_bytes"):
+            if hasattr(ma, attr):
+                out[attr] = int(getattr(ma, attr))
+        if out:
+            args = out.get("argument_size_in_bytes", 0)
+            alias = out.get("alias_size_in_bytes", 0)
+            outb = out.get("output_size_in_bytes", 0)
+            temp = out.get("temp_size_in_bytes", 0)
+            out["resident_bytes_est"] = args + temp + (outb - alias)
+    except Exception as e:          # pragma: no cover
+        out["memory_analysis_error"] = str(e)
+    return out
+
+
+# ======================================================================
+# Trip-count-aware HLO walker.
+#
+# XLA's HloCostAnalysis (and hence compiled.cost_analysis()) counts a
+# while-loop BODY exactly once, so any lax.scan'd layer stack under-reports
+# FLOPs/bytes/collectives by a factor of n_layers. The compiled HLO text
+# carries backend_config={"known_trip_count":{"n":...}} on each while op, so
+# we walk the computation graph with multiplicities instead:
+#   * flops: dot ops (2 * prod(result dims) * contraction size), traversing
+#     into fusions/calls, x trip multiplicity
+#   * bytes: per top-level op, operand+result buffer sizes (fusion counted
+#     as one op — its internals are register/VMEM traffic, not HBM)
+#   * collectives: result-buffer bytes per op type, x multiplicity
+# ======================================================================
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_CALL_ATTR = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCH_ATTR = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r"known_trip_count[^\d]*(\d+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_list_bytes(text: str) -> int:
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(text))
+
+
+def _first_shape_dims(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims
+
+
+class _Op:
+    __slots__ = ("name", "shape_text", "opcode", "rest", "is_root")
+
+    def __init__(self, name, shape_text, opcode, rest, is_root):
+        self.name = name
+        self.shape_text = shape_text
+        self.opcode = opcode
+        self.rest = rest
+        self.is_root = is_root
+
+    def operands(self):
+        return _OPERAND_RE.findall(self.rest.split("),")[0])
+
+
+def _parse_computations(hlo_text: str):
+    comps, cur = {}, None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and _COMP_HDR.match(line.strip()) \
+                and line.rstrip().endswith("{"):
+            name = _COMP_HDR.match(line.strip()).group(2)
+            cur = {"ops": [], "entry": line.startswith("ENTRY")}
+            comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur["ops"].append(_Op(m.group(1), m.group(2), m.group(3),
+                                  m.group(4), "ROOT " in line))
+    for c in comps.values():
+        _annotate(c)
+    return comps
+
+
+def _annotate(comp):
+    """Record which fusion params are dynamic-sliced / dus buffers, and
+    whether the root is a dynamic-update-slice (scan carry pattern)."""
+    symtab = {op.name: op.shape_text for op in comp["ops"]}
+    comp["symtab"] = symtab
+    comp["opmap"] = {op.name: op for op in comp["ops"]}
+    param_idx = {}
+    for op in comp["ops"]:
+        if op.opcode == "parameter":
+            m = re.match(r"(\d+)\)", op.rest)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    ds_params, dus_buf_params, root_dus_update = {}, set(), None
+    for op in comp["ops"]:
+        ops_in = op.operands()
+        if op.opcode == "dynamic-slice" and ops_in:
+            if ops_in[0] in param_idx:
+                ds_params[param_idx[ops_in[0]]] = \
+                    _shape_list_bytes(op.shape_text)
+        if op.opcode == "dynamic-update-slice" and ops_in:
+            if ops_in[0] in param_idx:
+                dus_buf_params.add(param_idx[ops_in[0]])
+            if op.is_root and len(ops_in) > 1:
+                root_dus_update = _shape_list_bytes(
+                    symtab.get(ops_in[1], ""))
+    comp["ds_params"] = ds_params
+    comp["dus_buf_params"] = dus_buf_params
+    comp["root_dus_update"] = root_dus_update
+
+
+def _dot_flops(op: _Op, symtab) -> float:
+    out_dims = _first_shape_dims(op.shape_text) or []
+    out_elems = float(np.prod(out_dims)) if out_dims else 1.0
+    cm = _CONTRACT_RE.search(op.rest)
+    names = op.operands()
+    csize = 1.0
+    if cm and names:
+        lhs = symtab.get(names[0])
+        if lhs:
+            dims = _first_shape_dims(lhs)
+            for ci in (int(x) for x in cm.group(1).split(",") if x):
+                if dims and ci < len(dims):
+                    csize *= dims[ci]
+    return 2.0 * out_elems * csize
+
+
+def _op_bytes(op: _Op, symtab, comps) -> float:
+    """HBM traffic estimate for one top-level op (HloCostAnalysis-style):
+    slices/gathers touch only the slice; dus writes only the update; fusion
+    operands that the fused computation dynamic-slices count at slice size,
+    dus-carry buffers count ~0 (aliased in-place)."""
+    names = op.operands()
+    res = _shape_list_bytes(op.shape_text)
+    if op.opcode == "dynamic-slice":
+        return 2.0 * res
+    if op.opcode == "dynamic-update-slice":
+        upd = _shape_list_bytes(symtab.get(names[1], "")) if len(names) > 1 \
+            else res
+        return 2.0 * upd
+    if op.opcode in ("gather",):
+        idx = _shape_list_bytes(symtab.get(names[-1], "")) if names else 0
+        return 2.0 * res + idx
+    if op.opcode in ("scatter",):
+        upd = _shape_list_bytes(symtab.get(names[-1], "")) if names else res
+        return 2.0 * upd + res * 0.0
+    if op.opcode == "fusion":
+        cm = _CALL_ATTR.search(op.rest)
+        called = comps.get(cm.group(1)) if cm else None
+        total = 0.0
+        if called:
+            for i, nm in enumerate(names):
+                if i in called["ds_params"]:
+                    total += called["ds_params"][i]
+                elif i in called["dus_buf_params"]:
+                    total += 0.0
+                else:
+                    total += _shape_list_bytes(symtab.get(nm, ""))
+            if called["root_dus_update"] is not None:
+                total += called["root_dus_update"]
+            else:
+                total += res
+            return total
+    if op.opcode == "while":
+        # carried state streams through the body (counted there); charge the
+        # init tuple once.
+        return sum(_shape_list_bytes(symtab.get(nm, "")) for nm in names)
+    ob = sum(_shape_list_bytes(symtab.get(nm, "")) for nm in names)
+    return ob + res
+
+
+
+def _is_bf16_upcast(name: str, comp, comps) -> bool:
+    """True if buffer `name` is an f32 buffer produced by converting a bf16
+    tensor — a CPU-backend FloatNormalization artifact (TPU would keep
+    bf16). Used to report TPU-corrected collective bytes."""
+    op = comp["opmap"].get(name)
+    if op is None or "f32[" not in op.shape_text:
+        return False
+    if op.opcode == "convert":
+        src_name = op.operands()
+        if src_name:
+            return "bf16[" in comp["symtab"].get(src_name[0], "")
+        return False
+    if op.opcode == "fusion":
+        m = _CALL_ATTR.search(op.rest)
+        called = comps.get(m.group(1)) if m else None
+        if called:
+            ops = [o for o in called["ops"] if o.opcode != "parameter"]
+            if len(ops) == 1 and ops[0].opcode == "convert":
+                src_name = ops[0].operands()
+                return bool(src_name) and "bf16[" in \
+                    called["symtab"].get(src_name[0], "")
+    return False
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    comps = _parse_computations(hlo_text)
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    coll = CollectiveStats()
+    coll_tpu = CollectiveStats()      # bf16-upcast-corrected (TPU view)
+    totals = {"flops": 0.0, "bytes": 0.0}
+    while_trips = []
+    seen_guard = [0]
+
+    def visit(comp_name, mult, inside_fusion):
+        if comp_name not in comps or mult <= 0:
+            return
+        seen_guard[0] += 1
+        if seen_guard[0] > 500_000:
+            raise RuntimeError("HLO walk explosion")
+        comp = comps[comp_name]
+        symtab = comp["symtab"]
+        for op in comp["ops"]:
+            base = op.opcode.replace("-start", "")
+            if base in _COLL_OPS and not op.opcode.endswith("-done"):
+                size = _shape_list_bytes(op.shape_text)
+                coll.bytes_by_op[base] = coll.bytes_by_op.get(base, 0) \
+                    + int(size * mult)
+                coll.count_by_op[base] = coll.count_by_op.get(base, 0) \
+                    + int(mult)
+                names = op.operands()
+                factor = 0.5 if names and _is_bf16_upcast(
+                    names[0], comp, comps) else 1.0
+                coll_tpu.bytes_by_op[base] = \
+                    coll_tpu.bytes_by_op.get(base, 0) \
+                    + int(size * mult * factor)
+            if op.opcode == "dot":
+                totals["flops"] += _dot_flops(op, symtab) * mult
+            if not inside_fusion and op.opcode not in _FREE_OPS:
+                totals["bytes"] += _op_bytes(op, symtab, comps) * mult
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.rest)
+                trip = int(tm.group(1)) if tm else 1
+                while_trips.append(trip)
+                for c in _CALL_ATTR.findall(op.rest):
+                    visit(c, mult * trip, inside_fusion)
+            elif op.opcode == "fusion":
+                for c in _CALL_ATTR.findall(op.rest):
+                    visit(c, mult, True)
+            elif op.opcode in ("call", "custom-call", "reduce", "map",
+                               "sort", "scatter", "reduce-window",
+                               "select-and-scatter"):
+                for c in _CALL_ATTR.findall(op.rest):
+                    visit(c, mult, inside_fusion)
+            elif op.opcode == "conditional":
+                bm = _BRANCH_ATTR.search(op.rest)
+                if bm:
+                    for c in _OPERAND_RE.findall(bm.group(1)):
+                        visit(c, mult, inside_fusion)
+    if entry:
+        visit(entry, 1.0, False)
+    return {"flops": totals["flops"], "bytes": totals["bytes"],
+            "collectives": coll, "collectives_tpu": coll_tpu,
+            "while_trips": while_trips}

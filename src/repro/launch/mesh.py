@@ -1,0 +1,42 @@
+"""Production mesh factories (TPU v5e).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. Single pod: 16x16 = 256 chips ('data','model'). Multi-pod: 2 pods =
+512 chips ('pod','data','model'), the pod axis being pure data parallelism
+across the inter-pod links.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py "
+            "sets this automatically)")
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires enough host devices)."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)

@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill + decode loop for any registered arch.
+
+Demonstrates the serving path the decode dry-run shapes lower: a batch of
+requests is prefilled (building per-layer caches), caches are grown to the
+serving horizon, then tokens are decoded step by step with greedy sampling.
+On the CPU container use --preset tiny; on hardware the same path jits
+against the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+      --preset tiny --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models import get_api
+from repro.models.model import pad_cache
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--preset", choices=["tiny", "full"], default="tiny")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.preset == "tiny" \
+        else get_config(args.arch)
+    cfg = cfg.replace(ssm_chunk=min(cfg.ssm_chunk,
+                                    max(8, args.prompt_len // 2)))
+    api = get_api(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init_params(key, cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    total = P + G
+    off = cfg.n_img_tokens if cfg.arch_type == "vlm" else 0
+
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    batch = {"tokens": prompts, "labels": prompts}
+    if cfg.arch_type == "vlm":
+        batch["img_embeds"] = jnp.zeros((B, cfg.n_img_tokens, cfg.d_model))
+    if cfg.arch_type == "audio":
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (B, cfg.enc_frames, cfg.d_model))
+
+    print(f"serving {cfg.name}: batch={B} prompt={P} gen={G}")
+    t0 = time.time()
+    logits, caches = jax.jit(
+        lambda p, b: api.prefill_fn(p, cfg, b))(params, batch)
+    caches = pad_cache(caches, P + off, total + off)
+    print(f"prefill: {time.time()-t0:.2f}s")
+
+    decode = jax.jit(lambda p, t, pos, c: api.decode_fn(p, cfg, t, pos, c))
+    tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1)
+    out_tokens = [tok]
+    t0 = time.time()
+    for step in range(G - 1):
+        pos = jnp.int32(P + off + step)
+        logits, caches = decode(params, tok, pos, caches)
+        tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], axis=-1)
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    gen = np.array(jnp.concatenate(out_tokens, axis=1))
+    print(f"decoded {G-1} steps in {dt:.2f}s "
+          f"({B*(G-1)/max(dt,1e-9):.1f} tok/s batch-aggregate)")
+    print("sample generations (token ids):")
+    for b in range(min(B, 2)):
+        print(f"  req{b}: {gen[b][:16].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.model import (  # noqa: F401
+    ModelApi,
+    active_param_count,
+    get_api,
+    param_count,
+)

@@ -1,0 +1,205 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every ``attn_every`` layers, with per-invocation LoRA adapters on the shared
+q/k/v projections (Zamba2's weight-sharing signature).
+
+Structure: the layer stack is scanned in GROUPS of ``attn_every`` Mamba2
+layers followed by one shared-attention invocation (its own KV cache per
+invocation); leftover layers (n_layers % attn_every) form a tail scan. This
+keeps HLO O(1) in depth while emitting exactly n_slots KV caches.
+
+Simplification vs the released model (noted in DESIGN.md): the shared block
+consumes the current hidden state (no [x, x_emb] concat) and is a standard
+pre-norm attn+MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (cross_entropy, dtype_of, embed,
+                                 init_embedding, init_swiglu, normal,
+                                 rms_norm, stacked_init, swiglu)
+from repro.sharding.partition import constrain
+
+
+def n_shared_slots(cfg):
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_hybrid(key, cfg):
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "emb": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dt),
+        "layers": stacked_init(
+            lambda k: {"ln": jnp.ones((cfg.d_model,), dt),
+                       "mamba": ssm.init_mamba2(k, cfg)},
+            ks[1], cfg.n_layers),
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": attn.init_attention(ks[2], cfg),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": init_swiglu(ks[3], cfg.d_model, cfg.d_ff, dt),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "head": normal(ks[4], (cfg.d_model, cfg.padded_vocab),
+                       cfg.d_model ** -0.5, dt),
+    }
+    if cfg.shared_attn_lora_rank:
+        params["lora"] = attn.init_attention_lora(
+            ks[5], cfg, n_shared_slots(cfg), cfg.shared_attn_lora_rank)
+    return params
+
+
+def _lora_slot(params, slot):
+    if "lora" not in params:
+        return None
+    return jax.tree.map(
+        lambda t: jax.lax.dynamic_index_in_dim(t, slot, 0, keepdims=False),
+        params["lora"])
+
+
+def _mamba_layer(p_l, cfg, x, mode, cache=None):
+    h = rms_norm(x, p_l["ln"], cfg.norm_eps)
+    if mode == "decode":
+        m, new_c = ssm.mamba2_decode(p_l["mamba"], cfg, h, cache)
+    elif mode == "prefill":
+        m, new_c = ssm.mamba2_forward(p_l["mamba"], cfg, h,
+                                      return_state=True)
+    else:
+        m, new_c = ssm.mamba2_forward(p_l["mamba"], cfg, h), None
+    return constrain(x + m, "activation"), new_c
+
+
+def _shared_apply(params, cfg, x, positions, slot, mode, cache=None,
+                  pos=None):
+    sp = params["shared"]
+    lora = _lora_slot(params, slot)
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    new_cache = None
+    if mode == "train":
+        a = attn.attn_train(sp["attn"], cfg, h, positions, lora=lora)
+    elif mode == "prefill":
+        a, new_cache = attn.attn_prefill(sp["attn"], cfg, h, positions,
+                                         lora=lora)
+    else:
+        a, new_cache = attn.attn_decode(sp["attn"], cfg, h, pos, cache,
+                                        lora=lora)
+    x = x + a
+    x = x + swiglu(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return constrain(x, "activation"), new_cache
+
+
+def _split_layers(params, cfg):
+    n_slots = n_shared_slots(cfg)
+    n_grouped = n_slots * cfg.attn_every
+    grouped = jax.tree.map(
+        lambda t: t[:n_grouped].reshape((n_slots, cfg.attn_every)
+                                        + t.shape[1:]),
+        params["layers"])
+    tail = jax.tree.map(lambda t: t[n_grouped:], params["layers"])
+    return grouped, tail, cfg.n_layers - n_grouped
+
+
+def _backbone(params, cfg, x, positions, mode, caches=None, pos=None):
+    """caches (decode): {'mamba': stacked(L), 'shared': stacked(n_slots)}."""
+    n_slots = n_shared_slots(cfg)
+    every = cfg.attn_every
+    grouped, tail, n_tail = _split_layers(params, cfg)
+
+    def mamba_scan(x, stack, mamba_caches):
+        def body(xc, xs):
+            p_l, c_l = xs if mode == "decode" else (xs, None)
+            xc, new_c = _mamba_layer(p_l, cfg, xc, mode, c_l)
+            return xc, new_c
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = (stack, mamba_caches) if mode == "decode" else stack
+        return jax.lax.scan(body, x, xs)
+
+    def group_body(xc, xs):
+        if mode == "decode":
+            g_params, slot, g_mcaches, s_cache = xs
+        else:
+            (g_params, slot), g_mcaches, s_cache = xs, None, None
+        xc, new_m = mamba_scan(xc, g_params, g_mcaches)
+        xc, new_s = _shared_apply(params, cfg, xc, positions, slot, mode,
+                                  cache=s_cache, pos=pos)
+        return xc, (new_m, new_s)
+
+    slots = jnp.arange(n_slots)
+    if mode == "decode":
+        g_mc = jax.tree.map(
+            lambda t: t[:n_slots * every].reshape((n_slots, every)
+                                                  + t.shape[1:]),
+            caches["mamba"])
+        tail_mc = jax.tree.map(lambda t: t[n_slots * every:],
+                               caches["mamba"])
+        xs = (grouped, slots, g_mc, caches["shared"])
+    else:
+        tail_mc = None
+        xs = (grouped, slots)
+    x, (g_mcaches, shared_caches) = jax.lax.scan(group_body, x, xs)
+    tail_caches = None
+    if n_tail:
+        x, tail_caches = mamba_scan(x, tail, tail_mc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    new_caches = None
+    if mode != "train":
+        mc = jax.tree.map(
+            lambda t: t.reshape((n_slots * every,) + t.shape[2:]),
+            g_mcaches)
+        if n_tail:
+            mc = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                              mc, tail_caches)
+        new_caches = {"mamba": mc, "shared": shared_caches}
+    return x, new_caches
+
+
+def hybrid_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, _ = _backbone(params, cfg, x, positions, "train")
+    logits = constrain(x @ params["head"], "logits")
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    if "client_weights" in batch:
+        mask = mask * batch["client_weights"][:, None]
+    return cross_entropy(logits, jnp.maximum(labels, 0), mask), {}
+
+
+def hybrid_prefill(params, cfg, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, caches = _backbone(params, cfg, x, positions, "prefill")
+    logits = constrain(x[:, -1:, :] @ params["head"], "logits")
+    return logits, caches
+
+
+def init_hybrid_cache(params, cfg, batch_size, length, dtype):
+    mamba_one = ssm.init_mamba2_cache(cfg, batch_size, dtype)
+    mamba = jax.tree.map(
+        lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), mamba_one)
+    kv_len = min(length, cfg.sliding_window) if cfg.sliding_window else length
+    one = attn.init_cache(cfg, batch_size, kv_len, dtype)
+    shared = jax.tree.map(
+        lambda t: jnp.zeros((n_shared_slots(cfg),) + t.shape, t.dtype)
+        if t.dtype != jnp.int32
+        else jnp.broadcast_to(t, (n_shared_slots(cfg),) + t.shape),
+        one)
+    return {"mamba": mamba, "shared": shared}
+
+
+def hybrid_decode(params, cfg, token, pos, caches):
+    x = embed(params["emb"], token)
+    x, new_caches = _backbone(params, cfg, x, None, "decode",
+                              caches=caches, pos=pos)
+    logits = constrain(x @ params["head"], "logits")
+    return logits, new_caches

@@ -1,0 +1,113 @@
+"""Unified model API: every architecture exposes the same five functions.
+
+    init_params(key, cfg)                       -> params
+    loss_fn(params, cfg, batch)                 -> (loss, metrics)
+    prefill_fn(params, cfg, batch)              -> (logits, caches)
+    init_cache_fn(params, cfg, B, length, dt)   -> caches
+    decode_fn(params, cfg, token, pos, caches)  -> (logits, caches)
+
+batch is a dict: tokens/labels (+ img_embeds for vlm, frames for audio,
+client_weights for MMFL p_k aggregation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, transformer, xlstm_lm
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    init_cache_fn: Callable
+    decode_fn: Callable
+
+
+def _lm_api():
+    def loss(params, cfg, batch):
+        return transformer.lm_loss(params, cfg, batch,
+                                   moe_groups=cfg.moe_groups)
+
+    def prefill(params, cfg, batch):
+        return transformer.lm_prefill(params, cfg, batch,
+                                      moe_groups=cfg.moe_groups)
+
+    def decode(params, cfg, token, pos, caches):
+        return transformer.lm_decode(params, cfg, token, pos, caches,
+                                     moe_groups=cfg.moe_groups)
+
+    return ModelApi(transformer.init_lm, loss, prefill,
+                    transformer.init_lm_cache, decode)
+
+
+_APIS = {
+    "dense": _lm_api(),
+    "moe": _lm_api(),
+    "vlm": _lm_api(),
+    "hybrid": ModelApi(hybrid.init_hybrid, hybrid.hybrid_loss,
+                       hybrid.hybrid_prefill, hybrid.init_hybrid_cache,
+                       hybrid.hybrid_decode),
+    "ssm": ModelApi(xlstm_lm.init_xlstm_lm, xlstm_lm.xlstm_loss,
+                    xlstm_lm.xlstm_prefill, xlstm_lm.init_xlstm_cache,
+                    xlstm_lm.xlstm_decode),
+    "audio": ModelApi(encdec.init_encdec, encdec.encdec_loss,
+                      encdec.encdec_prefill, encdec.init_encdec_cache,
+                      encdec.encdec_decode),
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    return _APIS[cfg.arch_type]
+
+
+def pad_cache(caches, old_len: int, new_len: int):
+    """Grow a prefill cache to a larger serving length (zeros / -1 pos)."""
+    import jax
+    import jax.tree_util as jtu
+
+    def pad(path, leaf):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        if name in ("k", "v", "c_kv", "k_rope") and leaf.ndim >= 3 \
+                and leaf.shape[2] == old_len:
+            pad_width = [(0, 0)] * leaf.ndim
+            pad_width[2] = (0, new_len - old_len)
+            return jnp.pad(leaf, pad_width)
+        if name == "positions" and leaf.shape[-1] == old_len:
+            pad_width = [(0, 0)] * (leaf.ndim - 1) + [(0, new_len - old_len)]
+            return jnp.pad(leaf, pad_width, constant_values=-1)
+        return leaf
+
+    return jtu.tree_map_with_path(pad, caches)
+
+
+def param_count(params) -> int:
+    import jax
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """MoE: params actually touched per token (top_k + shared experts)."""
+    import jax
+    total = param_count(params)
+    if not cfg.is_moe:
+        return total
+
+    def expert_sized(path, leaf):
+        keys = [getattr(k, "key", str(k)) for k in path]
+        return (len(leaf.shape) >= 3
+                and leaf.shape[-3] == cfg.n_experts
+                and keys[-1] in ("gate", "up", "down"))
+
+    import jax.tree_util as jtu
+    expert_total = sum(
+        leaf.size for path, leaf in jtu.tree_leaves_with_path(params)
+        if expert_sized(path, leaf))
+    active = total - expert_total + expert_total * cfg.top_k / cfg.n_experts
+    return int(active)

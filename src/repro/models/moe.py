@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN: top-k router, shared experts, capacity dispatch.
+
+Dispatch is *grouped*: tokens are split into ``moe_groups`` groups (set to
+the data-parallel degree at launch so each group is local to one mesh row —
+the standard per-device "dropping" implementation). Within each group every
+expert picks its top-C tokens by gate weight (C = n*k/E * capacity_factor);
+tokens beyond capacity are dropped (identity + shared experts still apply).
+This keeps dispatch fully vectorised (no sorting, no dynamic shapes) with
+honest FLOPs: E * C * d * ff ~= n * k * capacity_factor * d * ff.
+
+Expert weights are stacked (E, d, ff) so the launcher can shard E over the
+``model`` mesh axis (expert parallelism, deepseek) or ff (qwen2-moe).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, normal
+
+MOE_GROUPS = 1  # overridden via cfg_groups argument at launch
+
+
+def init_moe(key, cfg):
+    dt = dtype_of(cfg)
+    d, f = cfg.d_model, cfg.moe_d_ff
+    E = cfg.padded_experts            # dummy experts (if any) masked below
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal(ks[0], (d, E), d ** -0.5, jnp.float32),
+        "gate": normal(ks[1], (E, d, f), d ** -0.5, dt),
+        "up": normal(ks[2], (E, d, f), d ** -0.5, dt),
+        "down": normal(ks[3], (E, f, d), f ** -0.5, dt),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": normal(k1, (d, fs), d ** -0.5, dt),
+            "up": normal(k2, (d, fs), d ** -0.5, dt),
+            "down": normal(k3, (fs, d), fs ** -0.5, dt),
+        }
+    return p
+
+
+def capacity(n_tokens_per_group: int, cfg) -> int:
+    c = math.ceil(n_tokens_per_group * cfg.top_k / cfg.n_experts
+                  * cfg.capacity_factor)
+    return min(n_tokens_per_group, max(8, c))
+
+
+def moe_ffn(p, cfg, x, groups: int = 1):
+    """x: (B, S, d) -> (y, aux_loss). groups must divide B*S."""
+    Bsz, S, d = x.shape
+    E, k = cfg.padded_experts, cfg.top_k
+    N = Bsz * S
+    G = groups
+    n = N // G
+    C = capacity(n, cfg)
+    xf = x.reshape(G, n, d)
+
+    logits = (xf.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))               # (G,n,E)
+    if E > cfg.n_experts:             # mask padded (dummy) experts
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                       # (G,n,k)
+    if cfg.norm_topk:
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32)
+                    * topv[..., None], axis=2)                 # (G,n,E)
+
+    # per-expert top-C tokens within each group
+    w_sel, idx = jax.lax.top_k(gates.swapaxes(1, 2), C)        # (G,E,C)
+    flat_idx = idx.reshape(G, E * C)
+    xs = jnp.take_along_axis(xf, flat_idx[..., None], axis=1)  # (G,E*C,d)
+    xs = xs.reshape(G, E, C, d)
+
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", xs, p["gate"]))
+         * jnp.einsum("gecd,edf->gecf", xs, p["up"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down"])
+    ye = ye * w_sel[..., None].astype(ye.dtype)
+
+    out = jnp.zeros((G, n, d), ye.dtype)
+    out = jax.vmap(lambda o, i, y: o.at[i].add(y))(
+        out, flat_idx, ye.reshape(G, E * C, d))
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        out = out + (jax.nn.silu(xf @ sp["gate"]) * (xf @ sp["up"])
+                     ) @ sp["down"]
+
+    # switch-style load-balance loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(topi[..., 0], E), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_prob)
+    return out.reshape(Bsz, S, d), aux

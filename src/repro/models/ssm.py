@@ -1,0 +1,209 @@
+"""State-space sequence mixing: a generic chunked SSD core + Mamba2 block.
+
+The SSD (state-space dual) recurrence
+    h_t = exp(a_t) * h_{t-1} + b_t (x)  (outer product b_t xtilde_t)
+    y_t = <c_t, h_t>
+is shared by Mamba2 (a = dt*A, b/c shared across heads, x folded with dt)
+and mLSTM (a = log sigmoid(forget), b=k, c=q, x = i*v plus a normaliser
+channel) — see xlstm.py. We therefore implement ONE chunked core
+(``ssd_chunked``) with a group axis g: Mamba2 uses g=1 (B/C broadcast over
+heads), mLSTM uses g=H.
+
+Chunks are processed by a sequential, checkpointed lax.scan carrying the
+inter-chunk state, so the (chunk x chunk) decay matrix lives only for one
+chunk at a time — the TPU-friendly layout the Pallas kernel
+(kernels/ssm_scan.py) mirrors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, normal, rms_norm
+
+
+def segsum(a):
+    """(..., c) -> (..., c, c); out[i,j] = sum_{j<k<=i} a_k, -inf above diag."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x, a, b, c, chunk, h0=None, checkpoint_chunks=True):
+    """x:(B,L,G,Hg,P) values; a:(B,L,G,Hg) log-decay (<=0); b,c:(B,L,G,N).
+
+    Returns y:(B,L,G,Hg,P) and final state (B,G,Hg,N,P).
+    checkpoint_chunks=False skips the per-chunk remat — use when an OUTER
+    layer-level remat already recomputes this scan (double remat doubles
+    the backward's HBM traffic; see EXPERIMENTS.md §Perf).
+    """
+    B, L, G, Hg, P = x.shape
+    N = b.shape[-1]
+    chunk = min(chunk, L)
+    Lp = ((L + chunk - 1) // chunk) * chunk
+    if Lp != L:
+        # pad tail with identity steps: a=0 (decay 1), b=x=0 -> state kept
+        pad = [(0, 0), (0, Lp - L)] + [(0, 0)] * (x.ndim - 2)
+        x = jnp.pad(x, pad[:x.ndim])
+        a = jnp.pad(a, pad[:a.ndim])
+        b = jnp.pad(b, pad[:b.ndim])
+        c = jnp.pad(c, pad[:c.ndim])
+    Z = Lp // chunk
+    f32 = jnp.float32
+
+    def to_chunks(t):
+        return t.reshape(B, Z, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    dt = x.dtype
+    xc, bc, cc = (to_chunks(t) for t in (x, b, c))
+    ac = to_chunks(a.astype(f32))
+    if h0 is None:
+        h0 = jnp.zeros((B, G, Hg, N, P), f32)
+
+    def step(h, inp):
+        # decays in f32 (exp of cumsums), big tensors in native dtype with
+        # f32 accumulation — matches the TPU SSD kernel's numerics.
+        xz, az, bz, cz = inp                       # (B,c,G,Hg,*) etc.
+        acs = jnp.cumsum(az, axis=1)               # (B,c,G,Hg)
+        Lm = jnp.exp(segsum(az.transpose(0, 2, 3, 1))).astype(dt)
+        y_diag = jnp.einsum("bign,bjgn,bghij,bjghp->bighp", cz, bz, Lm, xz,
+                            preferred_element_type=f32)
+        decay_states = jnp.exp(acs[:, -1:, :, :] - acs).astype(dt)
+        new_contrib = jnp.einsum("bjgh,bjgn,bjghp->bghnp",
+                                 decay_states, bz, xz,
+                                 preferred_element_type=f32)
+        y_off = jnp.einsum("bign,bigh,bghnp->bighp", cz,
+                           jnp.exp(acs).astype(dt), h.astype(dt),
+                           preferred_element_type=f32)
+        h_next = h * jnp.exp(acs[:, -1, :, :])[..., None, None] + new_contrib
+        return h_next, (y_diag + y_off).astype(dt)
+
+    if checkpoint_chunks:
+        step = jax.checkpoint(step)
+    h_fin, ys = jax.lax.scan(step, h0, (xc, ac, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(B, Lp, G, Hg, P)[:, :L]
+    return y.astype(x.dtype), h_fin
+
+
+def ssd_step(h, x1, a1, b1, c1):
+    """Single-token recurrence. h:(B,G,Hg,N,P) x1:(B,G,Hg,P) a1:(B,G,Hg)
+    b1,c1:(B,G,N)."""
+    f32 = jnp.float32
+    h = (h * jnp.exp(a1.astype(f32))[..., None, None]
+         + jnp.einsum("bgn,bghp->bghnp", b1.astype(f32), x1.astype(f32)))
+    y = jnp.einsum("bgn,bghnp->bghp", c1.astype(f32), h)
+    return h, y.astype(x1.dtype)
+
+
+# ================================================================= Mamba2
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state
+
+
+def init_mamba2(key, cfg):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    d_inner, nheads, N = _dims(cfg)
+    conv_ch = d_inner + 2 * N                     # conv over [x, B, C]
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * N + nheads       # z, x, B, C, dt
+    return {
+        "in_proj": normal(ks[0], (d, proj_out), d ** -0.5, dt),
+        "conv_w": normal(ks[1], (cfg.ssm_conv, conv_ch), 0.1, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dt),
+        "D": jnp.ones((nheads,), dt),
+        "dt_bias": jnp.zeros((nheads,), dt),
+        "gate_norm": jnp.ones((d_inner,), dt),
+        "out_proj": normal(ks[2], (d_inner, d), d_inner ** -0.5, dt),
+    }
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv. seq:(B,L,C), w:(k,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq)
+    for i in range(k):
+        out = out + pad[:, i:i + seq.shape[1], :] * w[i]
+    return out + b
+
+
+def _mamba2_inner(p, cfg, u):
+    """Project and split; returns (z, xBC_conved, dt) pieces."""
+    d_inner, nheads, N = _dims(cfg)
+    proj = u @ p["in_proj"]
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:2 * d_inner + 2 * N]
+    dt_pre = proj[..., -nheads:]
+    return z, xBC, dt_pre
+
+
+def mamba2_forward(p, cfg, u, h0=None, conv0=None, return_state=False):
+    """u: (B,L,d). Full-sequence (train/prefill) path."""
+    B, L, _ = u.shape
+    d_inner, nheads, N = _dims(cfg)
+    z, xBC, dt_pre = _mamba2_inner(p, cfg, u)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xh = xBC[..., :d_inner].reshape(B, L, 1, nheads, cfg.ssm_head_dim)
+    Bk = xBC[..., d_inner:d_inner + N][:, :, None, :]          # (B,L,1,N)
+    Cq = xBC[..., d_inner + N:][:, :, None, :]
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,L,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = (dt * A)[:, :, None, :]                                # (B,L,1,H)
+    xdt = xh * dt[:, :, None, :, None].astype(xh.dtype)
+    y, h_fin = ssd_chunked(xdt, a, Bk, Cq, cfg.ssm_chunk, h0,
+                           checkpoint_chunks=cfg.ssm_checkpoint_chunks)
+    y = y.reshape(B, L, d_inner) + xBC[..., :d_inner] * jnp.repeat(
+        p["D"], cfg.ssm_head_dim)
+    if cfg.use_pallas:
+        from repro.kernels import gated_rmsnorm
+        y = gated_rmsnorm(y, z, p["gate_norm"], eps=cfg.norm_eps)
+    else:
+        y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    k = cfg.ssm_conv
+    xBC_raw = _mamba2_inner(p, cfg, u)[1]
+    tail = jnp.pad(xBC_raw, ((0, 0), (k, 0), (0, 0)))[:, -k:, :]
+    return out, {"state": h_fin, "conv": tail}
+
+
+def init_mamba2_cache(cfg, batch, dtype):
+    d_inner, nheads, N = _dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "state": jnp.zeros((batch, 1, nheads, N, cfg.ssm_head_dim),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv, conv_ch), dtype),
+    }
+
+
+def mamba2_decode(p, cfg, u1, cache):
+    """u1: (B,1,d); O(1) state update."""
+    B = u1.shape[0]
+    d_inner, nheads, N = _dims(cfg)
+    z, xBC_new, dt_pre = _mamba2_inner(p, cfg, u1)
+    conv = jnp.concatenate([cache["conv"][:, 1:, :], xBC_new], axis=1)
+    xBC = jnp.einsum("bkc,kc->bc", conv, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(xBC)
+    xh = xBC[:, :d_inner].reshape(B, 1, nheads, cfg.ssm_head_dim)
+    Bk = xBC[:, None, d_inner:d_inner + N]                      # (B,1,N)
+    Cq = xBC[:, None, d_inner + N:]
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = (dt * A)[:, None, :]                                    # (B,1,H)
+    xdt = xh * dt[:, None, :, None].astype(xh.dtype)
+    h, y = ssd_step(cache["state"], xdt, a, Bk, Cq)
+    y = y.reshape(B, d_inner) + xBC[:, :d_inner] * jnp.repeat(
+        p["D"], cfg.ssm_head_dim)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), p["gate_norm"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None, :], {"state": h, "conv": conv}

@@ -1,0 +1,207 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential scan).
+
+mLSTM is expressed in the decay-gated linear-attention form and reuses the
+generic SSD core from ssm.py: per-head log-decay a_t = logsigmoid(f_t),
+keys b=k, queries c=q, values x = sigmoid(i_t) * v with an extra
+all-ones channel appended to v that accumulates the normaliser
+n_t = sum decayed input gates; output y = (C q) / max(|n q|, eps).
+(Exp-input-gate stabilisation of the xLSTM paper is replaced by the
+sigmoid gate — noted in DESIGN.md; the recurrence and memory layout match.)
+
+sLSTM follows the paper's stabilised equations (m_t running max trick) with
+per-head block-diagonal recurrent matrices, scanned over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, normal, rms_norm
+from repro.models.ssm import ssd_chunked, ssd_step
+
+
+def _mdims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    dk = d_inner // H
+    return d_inner, H, dk
+
+
+# ================================================================== mLSTM
+
+def init_mlstm(key, cfg):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    d_inner, H, dk = _mdims(cfg)
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "up": normal(ks[0], (d, 2 * d_inner), std, dt),        # [xm, z]
+        "conv_w": normal(ks[1], (cfg.ssm_conv, d_inner), 0.1, dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "wq": normal(ks[2], (d_inner, d_inner), d_inner ** -0.5, dt),
+        "wk": normal(ks[3], (d_inner, d_inner), d_inner ** -0.5, dt),
+        "wif": normal(ks[4], (d_inner, 2 * H), d_inner ** -0.5, dt),
+        "bif": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]
+                               ).astype(dt),                   # forget bias>0
+        "gate_norm": jnp.ones((d_inner,), dt),
+        "down": normal(ks[5], (d_inner, d), d_inner ** -0.5, dt),
+    }
+
+
+def _mlstm_qkviaf(p, cfg, xm):
+    """xm: (B,L,d_inner) conv'd; returns q,k (B,L,H,dk), v+ones, logf, i."""
+    B, L, _ = xm.shape
+    d_inner, H, dk = _mdims(cfg)
+    q = (xm @ p["wq"]).reshape(B, L, H, dk)
+    k = (xm @ p["wk"]).reshape(B, L, H, dk) * dk ** -0.5
+    v = xm.reshape(B, L, H, dk)
+    gif = (xm @ p["wif"] + p["bif"]).astype(jnp.float32)
+    ig = jax.nn.sigmoid(gif[..., :H])                          # (B,L,H)
+    a = jax.nn.log_sigmoid(gif[..., H:])                       # log forget
+    ones = jnp.ones((B, L, H, 1), v.dtype)
+    xv = jnp.concatenate([v * ig[..., None].astype(v.dtype), ones
+                          * ig[..., None].astype(v.dtype)], axis=-1)
+    return q, k, xv, a
+
+
+def _mlstm_out(p, cfg, y, z, B, L):
+    d_inner, H, dk = _mdims(cfg)
+    num, den = y[..., :dk], y[..., dk:]
+    out = num / jnp.maximum(jnp.abs(den), 1e-3)
+    out = out.reshape(B, L, d_inner)
+    out = rms_norm(out * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return out @ p["down"]
+
+
+def _causal_conv(seq, w, b):
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq)
+    for i in range(k):
+        out = out + pad[:, i:i + seq.shape[1], :] * w[i]
+    return out + b
+
+
+def mlstm_forward(p, cfg, u, return_state=False):
+    B, L, _ = u.shape
+    d_inner, H, dk = _mdims(cfg)
+    up = u @ p["up"]
+    xm_raw, z = up[..., :d_inner], up[..., d_inner:]
+    xm = jax.nn.silu(_causal_conv(xm_raw, p["conv_w"], p["conv_b"]))
+    q, k, xv, a = _mlstm_qkviaf(p, cfg, xm)
+    # group axis g = H (per-head keys/queries), one head per group
+    y, h_fin = ssd_chunked(xv[:, :, :, None, :], a[:, :, :, None],
+                           k, q, cfg.ssm_chunk,
+                           checkpoint_chunks=cfg.ssm_checkpoint_chunks)
+    y = y[:, :, :, 0, :]                                       # (B,L,H,dk+1)
+    out = _mlstm_out(p, cfg, y, z, B, L)
+    if not return_state:
+        return out
+    kk = cfg.ssm_conv
+    tail = jnp.pad(xm_raw, ((0, 0), (kk, 0), (0, 0)))[:, -kk:, :]
+    return out, {"state": h_fin, "conv": tail}
+
+
+def init_mlstm_cache(cfg, batch, dtype):
+    d_inner, H, dk = _mdims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, 1, dk, dk + 1), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv, d_inner), dtype),
+    }
+
+
+def mlstm_decode(p, cfg, u1, cache):
+    B = u1.shape[0]
+    d_inner, H, dk = _mdims(cfg)
+    up = u1 @ p["up"]
+    xm_raw, z = up[..., :d_inner], up[..., d_inner:]
+    conv = jnp.concatenate([cache["conv"][:, 1:, :], xm_raw], axis=1)
+    xm = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv, p["conv_w"])
+                     + p["conv_b"])[:, None, :]
+    q, k, xv, a = _mlstm_qkviaf(p, cfg, xm)
+    h, y = ssd_step(cache["state"], xv[:, 0, :, None, :], a[:, 0, :, None],
+                    k[:, 0], q[:, 0])
+    y = y[:, :, 0, :][:, None]                                 # (B,1,H,dk+1)
+    out = _mlstm_out(p, cfg, y, z, B, 1)
+    return out, {"state": h, "conv": conv}
+
+
+# ================================================================== sLSTM
+
+def init_slstm(key, cfg):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    ffd = int(d * 4 / 3)
+    return {
+        "wx": normal(ks[0], (d, 4 * d), d ** -0.5, dt),        # z,i,f,o
+        "r": normal(ks[1], (4, H, dh, dh), dh ** -0.5, dt),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((d,))]).astype(dt),
+        "out_norm": jnp.ones((d,), dt),
+        "ff_gate": normal(ks[2], (d, ffd), d ** -0.5, dt),
+        "ff_up": normal(ks[2], (d, ffd), d ** -0.5, dt),
+        "ff_down": normal(ks[3], (ffd, d), ffd ** -0.5, dt),
+    }
+
+
+def _slstm_cell(p, cfg, wx_t, st):
+    """One time step. wx_t: (B,4d) precomputed input part; st: dict."""
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    B = wx_t.shape[0]
+    h = st["h"]                                                # (B,d)
+    hr = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hr, p["r"]).reshape(4, B, d)
+    pre = wx_t.reshape(B, 4, d).transpose(1, 0, 2) + rec + \
+        p["b"].reshape(4, d)[:, None, :]
+    zt = jnp.tanh(pre[0].astype(jnp.float32))
+    it = pre[1].astype(jnp.float32)
+    ft = pre[2].astype(jnp.float32)
+    ot = jax.nn.sigmoid(pre[3].astype(jnp.float32))
+    m_new = jnp.maximum(ft + st["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + st["m"] - m_new)
+    c = f_p * st["c"] + i_p * zt
+    n = f_p * st["n"] + i_p
+    h_new = ot * c / jnp.maximum(jnp.abs(n), 1e-3)
+    new = {"h": h_new.astype(h.dtype), "c": c, "n": n, "m": m_new}
+    return new, h_new.astype(h.dtype)
+
+
+def init_slstm_state(cfg, batch, dtype):
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), dtype),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.zeros((batch, d), jnp.float32)}
+
+
+def slstm_forward(p, cfg, u, state=None, return_state=False):
+    B, L, d = u.shape
+    wx = u @ p["wx"]                                           # (B,L,4d)
+    st = state or init_slstm_state(cfg, B, u.dtype)
+
+    def step(carry, wx_t):
+        return _slstm_cell(p, cfg, wx_t, carry)
+
+    st, hs = jax.lax.scan(step, st, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1)                                      # (B,L,d)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = (jax.nn.silu(y @ p["ff_gate"]) * (y @ p["ff_up"])) @ p["ff_down"]
+    if return_state:
+        return y, st
+    return y
+
+
+def slstm_decode(p, cfg, u1, state):
+    wx = (u1 @ p["wx"])[:, 0]
+    st, h = _slstm_cell(p, cfg, wx, state)
+    y = rms_norm(h[:, None, :], p["out_norm"], cfg.norm_eps)
+    y = (jax.nn.silu(y @ p["ff_gate"]) * (y @ p["ff_up"])) @ p["ff_down"]
+    return y, st

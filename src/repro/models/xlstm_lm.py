@@ -1,0 +1,167 @@
+"""xLSTM language model assembly: groups of (slstm_every - 1) mLSTM blocks
+followed by one sLSTM block (the xLSTM [7:1] interleave), scanned per group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (cross_entropy, dtype_of, embed,
+                                 init_embedding, normal, rms_norm,
+                                 stacked_init)
+from repro.models.xlstm import (init_mlstm, init_mlstm_cache, init_slstm,
+                                init_slstm_state, mlstm_decode,
+                                mlstm_forward, slstm_decode, slstm_forward)
+from repro.sharding.partition import constrain
+
+
+def _layout(cfg):
+    every = cfg.slstm_every or (cfg.n_layers + 1)
+    n_groups = cfg.n_layers // every
+    n_m_per_group = every - 1
+    n_tail = cfg.n_layers - n_groups * every   # trailing mLSTM layers
+    return every, n_groups, n_m_per_group, n_tail
+
+
+def init_xlstm_lm(key, cfg):
+    dt = dtype_of(cfg)
+    every, n_groups, n_mpg, n_tail = _layout(cfg)
+    ks = jax.random.split(key, 5)
+    params = {
+        "emb": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "head": normal(ks[3], (cfg.d_model, cfg.padded_vocab),
+                       cfg.d_model ** -0.5, dt),
+    }
+    n_mlstm = n_groups * n_mpg + n_tail
+    if n_mlstm:
+        params["mlstm_layers"] = stacked_init(
+            lambda k: {"ln": jnp.ones((cfg.d_model,), dt),
+                       "cell": init_mlstm(k, cfg)}, ks[1], n_mlstm)
+    if n_groups:
+        params["slstm_layers"] = stacked_init(
+            lambda k: {"ln": jnp.ones((cfg.d_model,), dt),
+                       "cell": init_slstm(k, cfg)}, ks[2], n_groups)
+    return params
+
+
+def _mlstm_block(p_l, cfg, x, mode, cache=None):
+    h = rms_norm(x, p_l["ln"], cfg.norm_eps)
+    if mode == "decode":
+        m, c = mlstm_decode(p_l["cell"], cfg, h, cache)
+    elif mode == "prefill":
+        m, c = mlstm_forward(p_l["cell"], cfg, h, return_state=True)
+    else:
+        m, c = mlstm_forward(p_l["cell"], cfg, h), None
+    return constrain(x + m, "activation"), c
+
+
+def _slstm_block(p_l, cfg, x, mode, state=None):
+    h = rms_norm(x, p_l["ln"], cfg.norm_eps)
+    if mode == "decode":
+        m, st = slstm_decode(p_l["cell"], cfg, h, state)
+    elif mode == "prefill":
+        m, st = slstm_forward(p_l["cell"], cfg, h, return_state=True)
+    else:
+        m, st = slstm_forward(p_l["cell"], cfg, h), None
+    return constrain(x + m, "activation"), st
+
+
+def _backbone(params, cfg, x, mode, caches=None, pos=None):
+    every, n_groups, n_mpg, n_tail = _layout(cfg)
+
+    def m_scan(x, stack, mcaches):
+        def body(xc, xs):
+            p_l, c_l = xs if mode == "decode" else (xs, None)
+            return _mlstm_block(p_l, cfg, xc, mode, c_l)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        xs = (stack, mcaches) if mode == "decode" else stack
+        return jax.lax.scan(body, x, xs)
+
+    n_grouped_m = n_groups * n_mpg
+    if "mlstm_layers" in params:
+        gm = jax.tree.map(
+            lambda t: t[:n_grouped_m].reshape((n_groups, n_mpg)
+                                              + t.shape[1:])
+            if n_groups else t[:0], params["mlstm_layers"])
+        tail_m = jax.tree.map(lambda t: t[n_grouped_m:],
+                              params["mlstm_layers"])
+
+    def group_body(xc, xs):
+        if mode == "decode":
+            gm_l, sl_l, gmc, slc = xs
+        else:
+            (gm_l, sl_l), gmc, slc = xs, None, None
+        xc, new_mc = m_scan(xc, gm_l, gmc)
+        xc, new_sc = _slstm_block(sl_l, cfg, xc, mode, slc)
+        return xc, (new_mc, new_sc)
+
+    new_m, new_s, tail_c = None, None, None
+    if n_groups:
+        if mode == "decode":
+            gmc = jax.tree.map(
+                lambda t: t[:n_grouped_m].reshape((n_groups, n_mpg)
+                                                  + t.shape[1:]),
+                caches["mlstm"])
+            xs = (gm, params["slstm_layers"], gmc, caches["slstm"])
+        else:
+            xs = (gm, params["slstm_layers"])
+        x, (new_m, new_s) = jax.lax.scan(group_body, x, xs)
+        if mode != "train":
+            new_m = jax.tree.map(
+                lambda t: t.reshape((n_grouped_m,) + t.shape[2:]), new_m)
+    if n_tail:
+        tmc = jax.tree.map(lambda t: t[n_grouped_m:], caches["mlstm"]) \
+            if mode == "decode" else None
+        x, tail_c = m_scan(x, tail_m, tmc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    caches_out = None
+    if mode != "train":
+        mc = new_m
+        if n_tail:
+            mc = tail_c if mc is None else jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], 0), mc, tail_c)
+        caches_out = {"mlstm": mc, "slstm": new_s}
+    return x, caches_out
+
+
+def xlstm_loss(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = embed(params["emb"], tokens)
+    x, _ = _backbone(params, cfg, x, "train")
+    logits = constrain(x @ params["head"], "logits")
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    if "client_weights" in batch:
+        mask = mask * batch["client_weights"][:, None]
+    return cross_entropy(logits, jnp.maximum(labels, 0), mask), {}
+
+
+def xlstm_prefill(params, cfg, batch):
+    x = embed(params["emb"], batch["tokens"])
+    x, caches = _backbone(params, cfg, x, "prefill")
+    logits = constrain(x[:, -1:, :] @ params["head"], "logits")
+    return logits, caches
+
+
+def init_xlstm_cache(params, cfg, batch_size, length, dtype):
+    every, n_groups, n_mpg, n_tail = _layout(cfg)
+    n_mlstm = n_groups * n_mpg + n_tail
+    mc = jax.tree.map(
+        lambda t: jnp.zeros((n_mlstm,) + t.shape, t.dtype),
+        init_mlstm_cache(cfg, batch_size, dtype))
+    sc = None
+    if n_groups:
+        sc = jax.tree.map(
+            lambda t: jnp.zeros((n_groups,) + t.shape, t.dtype),
+            init_slstm_state(cfg, batch_size, dtype))
+    return {"mlstm": mc, "slstm": sc}
+
+
+def xlstm_decode(params, cfg, token, pos, caches):
+    x = embed(params["emb"], token)
+    x, new_caches = _backbone(params, cfg, x, "decode", caches=caches,
+                              pos=pos)
+    logits = constrain(x @ params["head"], "logits")
+    return logits, new_caches

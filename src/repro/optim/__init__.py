@@ -1,0 +1,6 @@
+from repro.optim.optim import (  # noqa: F401
+    Optimizer,
+    adamw,
+    clip_by_global_norm,
+    sgd,
+)

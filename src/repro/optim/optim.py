@@ -1,0 +1,96 @@
+"""Optimizers from scratch (no optax): pytree-native AdamW and SGD.
+
+An Optimizer is a pair (init, update):
+    state = init(params)
+    new_params, new_state = update(params, grads, state)
+Moments are kept in fp32 regardless of param dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01,
+          max_grad_norm=0.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(params, grads, state, lr_scale=1.0):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            step = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * lr_scale * step
+            return newp.astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        # unzip the 3-tuples
+        newp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return newp, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr=0.1, momentum=0.0):
+    def init(params):
+        if momentum:
+            return {"vel": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+        return {}
+
+    def update(params, grads, state, lr_scale=1.0):
+        if momentum:
+            vel = jax.tree.map(
+                lambda v, g: momentum * v + g.astype(jnp.float32),
+                state["vel"], grads)
+            newp = jax.tree.map(
+                lambda p, v: (p.astype(jnp.float32)
+                              - lr * lr_scale * v).astype(p.dtype),
+                params, vel)
+            return newp, {"vel": vel}
+        newp = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * lr_scale * g.astype(jnp.float32)
+                          ).astype(p.dtype),
+            params, grads)
+        return newp, state
+
+    return Optimizer(init, update)

@@ -1,0 +1,195 @@
+"""Partition rules: parameter/optimizer/cache/batch PartitionSpecs.
+
+Scheme (TPU v5e):
+  * mesh ('data','model') single pod; ('pod','data','model') multi-pod
+  * params: FSDP over 'data' on the d_model-ish axis, TP over 'model' on
+    heads/ffn/vocab/experts; replicated over 'pod' (pods are pure DP)
+  * activations: batch over ('pod','data'); optional Megatron-style
+    sequence sharding over 'model' at layer boundaries
+  * every rule is divisibility-checked — a dim that doesn't divide its mesh
+    axis is replicated (e.g. qwen3's 8 kv heads on the 16-way model axis)
+
+``constrain`` is a lightweight context used by model code: the launcher
+registers NamedShardings for 'activation'/'logits' kinds; on CPU tests the
+context is empty and constrain is a no-op.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ------------------------------------------------------------- constrain ctx
+
+_CTX: dict = {}
+
+
+def set_sharding_ctx(**kw):
+    _CTX.update(kw)
+
+
+def clear_sharding_ctx():
+    _CTX.clear()
+
+
+def constrain(x, kind: str):
+    """Sharding hint that silently drops axes that don't divide the dim."""
+    sh = _CTX.get(kind)
+    if sh is None or len(sh.spec) != x.ndim:
+        return x
+    mesh = sh.mesh
+    spec = []
+    for dim, names in zip(x.shape, sh.spec):
+        if names is None:
+            spec.append(None)
+            continue
+        ns = (names,) if isinstance(names, str) else tuple(names)
+        size = int(np.prod([mesh.shape[n] for n in ns]))
+        spec.append(names if dim % size == 0 and dim > 1 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ------------------------------------------------------------- param rules
+
+STACKED_KEYS = {"dense_layers", "moe_layers", "layers", "enc_layers",
+                "dec_layers", "mlstm_layers", "slstm_layers", "lora"}
+
+# 2-D weights whose FIRST dim is the "wide" (tp) dim (projections back to d)
+_OUT_PROJ = {"wo", "down", "out_proj", "fc2", "ff_down"}
+# 2-D weights (d_in, d_out): fsdp on in, tp on out
+_IN_PROJ = {"wq", "wk", "wv", "gate", "up", "in_proj", "fc1", "wx",
+            "ff_gate", "ff_up", "wkv_a", "wkv_b", "head", "wif"}
+
+
+def _axis(dim: int, name: str, sizes: dict) -> Optional[str]:
+    """Return the axis name if it divides dim, else None (replicate)."""
+    return name if name in sizes and dim % sizes[name] == 0 else None
+
+
+def _spec_2d(name, shape, sizes):
+    a, b = shape
+    if name in _OUT_PROJ:
+        return P(_axis(a, "model", sizes), _axis(b, "data", sizes))
+    if name == "tok":
+        return P(_axis(a, "model", sizes), _axis(b, "data", sizes))
+    if name == "router":
+        return P(_axis(a, "data", sizes), None)
+    if name == "conv_w":
+        return P(None, _axis(b, "model", sizes))
+    if name in _IN_PROJ or True:   # default: (in, out) orientation
+        return P(_axis(a, "data", sizes), _axis(b, "model", sizes))
+
+
+def _spec_3d(name, shape, sizes, expert_parallel):
+    E, a, b = shape
+    # stacked experts (E, d, f) / (E, f, d)
+    ep = _axis(E, "model", sizes) if expert_parallel else None
+    if name == "down":
+        return P(ep, None if ep else _axis(a, "model", sizes),
+                 _axis(b, "data", sizes))
+    return P(ep, _axis(a, "data", sizes),
+             None if ep else _axis(b, "model", sizes))
+
+
+def param_spec(path: tuple, leaf, cfg=None) -> P:
+    """PartitionSpec for one parameter leaf given its tree path."""
+    sizes = _CTX.get("axis_sizes", {})
+    keys = [getattr(k, "key", str(k)) for k in path]
+    name = keys[-1]
+    shape = leaf.shape
+    stacked = keys[0] in STACKED_KEYS or (len(keys) > 1
+                                          and keys[1] in STACKED_KEYS)
+    if stacked and len(shape) >= 1:
+        inner = shape[1:]
+        if len(inner) == 0:
+            return P(None)
+        if len(inner) == 1:
+            return P(None, None)
+        if len(inner) == 2:
+            return P(None, *_spec_2d(name, inner, sizes))
+        if len(inner) == 3:
+            ep = bool(cfg) and cfg.n_experts > 0 and \
+                inner[0] % sizes.get("model", 1) == 0
+            return P(None, *_spec_3d(name, inner, sizes, ep))
+        return P(*((None,) * len(shape)))
+    if len(shape) <= 1:
+        return P(*((None,) * len(shape)))
+    if len(shape) == 2:
+        return _spec_2d(name, shape, sizes)
+    if len(shape) == 3:
+        ep = bool(cfg) and cfg.n_experts > 0 and \
+            shape[0] % sizes.get("model", 1) == 0
+        return _spec_3d(name, shape, sizes, ep)
+    return P(*((None,) * len(shape)))
+
+
+def tree_param_specs(params, cfg=None):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: param_spec(p, x, cfg), params)
+
+
+def set_axis_sizes(mesh: Mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    _CTX["axis_sizes"] = sizes
+
+
+def dp_axes(mesh: Mesh):
+    """Batch ('data-parallel') axes: ('pod','data') when pod exists."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_spec(mesh: Mesh, batch_size: int, ndim: int) -> P:
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    first = dp if batch_size % dp_size == 0 and batch_size > 1 else None
+    return P(first, *([None] * (ndim - 1)))
+
+
+def cache_spec(path: tuple, leaf, mesh: Mesh, batch_size: int) -> P:
+    """KV/SSM cache sharding: batch over dp if divisible; kv-heads or
+    head_dim (or seq for big batch=1 caches) over model."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    keys = [getattr(k, "key", str(k)) for k in path]
+    name = keys[-1]
+    shape = leaf.shape
+    bdim = 1 if len(shape) > 1 else None       # caches stacked (L, B, ...)
+    spec = [None] * len(shape)
+    if name == "positions":
+        return P(*spec)
+    if bdim is not None and shape[bdim] % dp_size == 0 and shape[bdim] > 1:
+        spec[bdim] = dp
+    if name in ("k", "v"):                     # (L,B,S,KV,hd)
+        if shape[-2] % tp == 0:
+            spec[-2] = "model"
+        elif shape[-1] % tp == 0:
+            spec[-1] = "model"
+    elif name in ("c_kv", "k_rope"):           # (L,B,S,r) MLA latent cache
+        # mla_cache_shard: 'latent' -> psum of (B,H,1,S) scores each step;
+        # 'seq' -> flash-decode style: per-shard partial softmax, only the
+        # (B,H,1,1) stats and (B,H,r) partial outputs cross chips.
+        mode = _CTX.get("mla_cache_shard", "latent")
+        if mode == "latent" and shape[-1] % tp == 0:
+            spec[-1] = "model"
+        elif mode == "seq" and len(shape) >= 3 and shape[-2] % tp == 0 \
+                and shape[-2] > 1:
+            spec[-2] = "model"
+    elif name == "conv":                       # (L,B,k,ch) ssm conv tail
+        if shape[-1] % tp == 0:
+            spec[-1] = "model"
+    elif name == "state":                      # (L,B,1,H,N,P) ssm state
+        if len(shape) >= 3 and shape[3] % tp == 0:
+            spec[3] = "model"
+    elif name in ("h", "c", "n", "m"):         # slstm (G,B,d)
+        if shape[-1] % tp == 0:
+            spec[-1] = "model"
+    return P(*spec)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Keep tests on ONE device: the 512-device flag belongs to dryrun.py only.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,85 @@
+"""Unit tests for the alpha-fair client-task allocation (paper Eq. 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocation import (AllocationStrategy, allocate,
+                                   alpha_fair_probs, allocate_round_robin)
+
+
+def test_probs_sum_to_one():
+    p = alpha_fair_probs(jnp.array([0.5, 1.0, 2.0]), alpha=3.0)
+    assert np.isclose(float(p.sum()), 1.0, atol=1e-6)
+
+
+def test_alpha_one_is_uniform():
+    p = alpha_fair_probs(jnp.array([0.1, 1.0, 10.0]), alpha=1.0)
+    np.testing.assert_allclose(np.asarray(p), np.ones(3) / 3, atol=1e-6)
+
+
+def test_higher_loss_gets_higher_prob():
+    p = alpha_fair_probs(jnp.array([0.2, 0.4, 0.8]), alpha=3.0)
+    assert p[0] < p[1] < p[2]
+
+
+def test_alpha_infinity_concentrates_on_worst():
+    p = alpha_fair_probs(jnp.array([0.2, 0.4, 0.8]), alpha=50.0)
+    assert float(p[2]) > 0.999
+
+
+def test_eq4_closed_form():
+    losses = np.array([0.3, 0.5, 0.9])
+    alpha = 3.0
+    expect = losses ** (alpha - 1) / (losses ** (alpha - 1)).sum()
+    got = np.asarray(alpha_fair_probs(jnp.asarray(losses), alpha))
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+def test_scale_invariance():
+    """Eq. 4 depends only on loss ratios."""
+    l1 = jnp.array([0.2, 0.4, 0.8])
+    p1 = alpha_fair_probs(l1, 4.0)
+    p2 = alpha_fair_probs(l1 * 7.3, 4.0)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=1e-5)
+
+
+def test_allocation_unbiased_across_clients():
+    """The scheme is iid across clients: empirical per-client task rates
+    match Eq. 4 for every client."""
+    key = jax.random.PRNGKey(0)
+    losses = jnp.array([0.3, 0.7])
+    counts = np.zeros((10, 2))
+    for i in range(300):
+        a = allocate(jax.random.fold_in(key, i), AllocationStrategy.FEDFAIR,
+                     losses, 10, alpha=3.0)
+        for c in range(10):
+            counts[c, int(a[c])] += 1
+    rates = counts / counts.sum(1, keepdims=True)
+    p = np.asarray(alpha_fair_probs(losses, 3.0))
+    assert np.all(np.abs(rates - p) < 0.12)
+
+
+def test_round_robin_balanced():
+    a = allocate_round_robin(0, 3, 9)
+    counts = np.bincount(np.asarray(a), minlength=3)
+    assert counts.tolist() == [3, 3, 3]
+
+
+def test_allocate_jit_compatible():
+    f = jax.jit(lambda k, l: allocate(k, AllocationStrategy.FEDFAIR, l, 8,
+                                      alpha=2.0),
+                static_argnames=())
+    out = f(jax.random.PRNGKey(1), jnp.array([0.5, 0.5]))
+    assert out.shape == (8,)
+    assert set(np.asarray(out).tolist()) <= {0, 1}
+
+
+@pytest.mark.parametrize("alpha", [1.0, 2.0, 3.0, 10.0])
+def test_probs_monotone_in_alpha_for_worst_task(alpha):
+    """Cor. 5 intuition: the worst task's probability is non-decreasing in
+    alpha."""
+    losses = jnp.array([0.2, 0.5, 0.9])
+    p_lo = alpha_fair_probs(losses, alpha)
+    p_hi = alpha_fair_probs(losses, alpha + 1.0)
+    assert float(p_hi[2]) >= float(p_lo[2]) - 1e-6

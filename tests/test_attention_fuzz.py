@@ -1,0 +1,71 @@
+"""Hypothesis fuzzing of the chunked attention core against a dense oracle
+— shapes, GQA ratios, windows, cache slots."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import _sdpa_chunked
+
+
+def dense_oracle(q, k, v, q_pos, k_pos, scale, causal, window):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * scale
+    mask = (k_pos[None, :] >= 0)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf).astype(q.dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 2),                 # B
+    st.sampled_from([(1, 1), (2, 1), (4, 2), (6, 3)]),  # (H, KV)
+    st.integers(4, 48),                # Sq
+    st.integers(8, 64),                # hd-ish (rounded to even)
+    st.integers(0, 1),                 # causal
+    st.sampled_from([0, 4, 16]),       # window
+    st.integers(0, 10_000),            # seed
+)
+def test_chunked_attention_fuzz(B, hkv, Sq, hd, causal, window, seed):
+    H, KV = hkv
+    hd = 2 * (hd // 2)
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Sq, KV, hd))
+    v = jax.random.normal(ks[2], (B, Sq, KV, hd))
+    pos = jnp.arange(Sq, dtype=jnp.int32)
+    out = _sdpa_chunked(q, k, v, pos, pos, hd ** -0.5, causal=bool(causal),
+                        window=window, chunk=8)
+    ref = dense_oracle(q, k, v, pos, pos, hd ** -0.5, bool(causal), window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.integers(0, 10_000))
+def test_chunked_attention_invalid_slots_ignored(n_valid, seed):
+    """Entries with k_pos = -1 (unwritten cache slots) never contribute."""
+    key = jax.random.PRNGKey(seed)
+    B, H, KV, hd, W = 1, 2, 2, 16, 64
+    n_valid = min(n_valid, W)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, W, KV, hd))
+    v = jax.random.normal(ks[2], (B, W, KV, hd))
+    k_pos = jnp.where(jnp.arange(W) < n_valid, jnp.arange(W), -1)
+    q_pos = jnp.array([W], jnp.int32)
+    out = _sdpa_chunked(q, k, v, q_pos, k_pos, hd ** -0.5, causal=True)
+    # corrupting the INVALID slots must not change the output
+    k2 = k.at[:, n_valid:].set(99.0)
+    v2 = v.at[:, n_valid:].set(-99.0)
+    out2 = _sdpa_chunked(q, k2, v2, q_pos, k_pos, hd ** -0.5, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)

@@ -1,0 +1,63 @@
+"""MMFLCoordinator (scale-level orchestration) behaviour."""
+import numpy as np
+
+from repro.core.allocation import AllocationStrategy
+from repro.core.mmfl import MMFLCoordinator
+
+
+def test_allocation_covers_active_fraction():
+    c = MMFLCoordinator(["a", "b"], n_clients=20, participation=0.5, seed=0)
+    c.report("a", 1.0)
+    c.report("b", 1.0)
+    alloc = c.next_round()
+    total = sum(len(v) for v in alloc.values())
+    assert total == 10
+
+
+def test_worse_task_gets_more_clients_on_average():
+    c = MMFLCoordinator(["easy", "hard"], n_clients=50, alpha=3.0, seed=1)
+    c.report("easy", 0.2)
+    c.report("hard", 0.8)
+    counts = np.zeros(2)
+    for _ in range(30):
+        alloc = c.next_round()
+        counts += [len(alloc["easy"]), len(alloc["hard"])]
+    assert counts[1] > counts[0] * 2
+
+
+def test_unreported_losses_fall_back_to_uniformish():
+    c = MMFLCoordinator(["a", "b"], n_clients=10, seed=2)
+    alloc = c.next_round()      # no losses yet
+    assert sum(len(v) for v in alloc.values()) == 10
+
+
+def test_eligibility_matrix_respected():
+    elig = np.zeros((10, 2), bool)
+    elig[:5, 0] = True
+    elig[5:, 1] = True
+    c = MMFLCoordinator(["a", "b"], n_clients=10, seed=3,
+                        eligibility=elig)
+    c.report("a", 0.5)
+    c.report("b", 0.5)
+    for _ in range(5):
+        alloc = c.next_round()
+        assert all(i < 5 for i in alloc["a"])
+        assert all(i >= 5 for i in alloc["b"])
+
+
+def test_client_weights_normalised():
+    c = MMFLCoordinator(["a"], n_clients=10, seed=4)
+    w = c.client_weights(np.array([1, 3, 5]))
+    assert np.isclose(w.sum(), 1.0)
+    assert len(w) == 3
+
+
+def test_round_robin_strategy():
+    c = MMFLCoordinator(["a", "b", "c"], n_clients=9, seed=5,
+                        strategy=AllocationStrategy.ROUND_ROBIN)
+    for t in ("a", "b", "c"):
+        c.report(t, 1.0)
+    alloc = c.next_round()
+    counts = sorted(len(v) for v in alloc.values())
+    assert sum(counts) == 9
+    assert counts[-1] - counts[0] <= 1      # balanced

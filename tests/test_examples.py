@@ -1,0 +1,44 @@
+"""The shipped examples must keep running (fast variants)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, timeout=timeout, env=env, cwd=ROOT)
+
+
+def test_auction_recruitment_example():
+    p = run(["examples/auction_recruitment.py"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "MMFL Max-Min Fair" in p.stdout
+
+
+def test_train_concurrent_lms_example_short():
+    p = run(["examples/train_concurrent_lms.py", "--rounds", "2",
+             "--archs", "smollm-135m,qwen1.5-0.5b"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "final losses" in p.stdout
+
+
+def test_serve_launcher_short():
+    p = run(["-m", "repro.launch.serve", "--arch", "smollm-135m",
+             "--preset", "tiny", "--batch", "2", "--prompt-len", "8",
+             "--gen", "4"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "decoded" in p.stdout
+
+
+def test_true_fedavg_tau_local_steps():
+    """tau>1 path: vmapped local SGD + Pallas fedavg aggregation."""
+    p = run(["-m", "repro.launch.train", "--archs", "smollm-135m",
+             "--rounds", "2", "--clients", "6", "--seq", "32",
+             "--batch", "4", "--tau", "2"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "final losses" in p.stdout

@@ -1,0 +1,79 @@
+"""Checks of the paper's analytical claims (Section IV) on small instances."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.fairness import (alpha_fair_objective, cosine_uniformity,
+                                 fairness_report)
+from repro.core.theory import (corollary5_term, expected_allocation,
+                               task_selection_prob, convergence_bound)
+
+
+def _alpha_optimal_losses(alpha, budgets=np.linspace(0, 1, 101)):
+    """Toy 2-task resource split: f_s(r) = c_s / (r_s + 0.1); minimise
+    sum f_s^alpha over the split r1 + r2 = 1 by grid search."""
+    c = np.array([1.0, 3.0])
+
+    def losses(r1):
+        r = np.array([r1, 1 - r1])
+        return c / (r + 0.1)
+
+    vals = [np.sum(losses(r) ** alpha) for r in budgets]
+    r_star = budgets[int(np.argmin(vals))]
+    return losses(r_star)
+
+
+def test_lemma1_alpha2_lower_variance_than_alpha1():
+    f1 = _alpha_optimal_losses(1.0)
+    f2 = _alpha_optimal_losses(2.0)
+    assert np.var(f2) <= np.var(f1) + 1e-12
+
+
+def test_lemma2_alpha2_higher_cosine_similarity():
+    f1 = _alpha_optimal_losses(1.0)
+    f2 = _alpha_optimal_losses(2.0)
+    assert cosine_uniformity(f2) >= cosine_uniformity(f1) - 1e-12
+
+
+def test_corollary5_term_decreasing_in_alpha():
+    """For the worst task, the sigma^2 coefficient decreases with alpha."""
+    losses = [0.3, 0.5, 0.9]
+    worst = 2
+    terms = [corollary5_term(losses, a, worst, n_clients=12)
+             for a in (1.0, 2.0, 4.0, 8.0)]
+    assert all(terms[i + 1] <= terms[i] + 1e-12 for i in range(3))
+
+
+def test_selection_prob_is_binomial_parameter():
+    losses = [0.2, 0.8]
+    q = task_selection_prob(losses, 3.0, 1)
+    expect = 0.8 ** 3 / (0.2 ** 3 + 0.8 ** 3)
+    assert np.isclose(q, expect, rtol=1e-9)
+
+
+def test_expected_allocation_sums_to_clients():
+    ea = expected_allocation([0.1, 0.4, 0.5], 3.0, 100)
+    assert np.isclose(ea.sum(), 100)
+    assert np.argmax(ea) == 2
+
+
+def test_convergence_bound_decreases_in_T():
+    kw = dict(gamma=10, tau=5, G2=1.0, sigma2=1.0, rho_bar=1.0,
+              rho_tilde=1.2, L=1.0, mu=0.5, Gamma_s=0.3, w0_dist=1.0)
+    b1 = convergence_bound(T=10, **kw)
+    b2 = convergence_bound(T=1000, **kw)
+    assert b2 < b1
+    # the bias term remains: bound does not go to 0
+    assert b2 > 0
+
+
+def test_alpha_fair_objective_matches_eq2():
+    losses = jnp.array([0.5, 2.0])
+    assert np.isclose(float(alpha_fair_objective(losses, 2.0)),
+                      0.25 + 4.0, rtol=1e-6)
+
+
+def test_fairness_report_fields():
+    rep = fairness_report([0.8, 0.9, 1.0])
+    assert rep["min_acc"] == 0.8
+    assert 0 < rep["var_acc"] < 0.01
+    assert rep["cosine_uniformity"] <= 1.0

@@ -1,0 +1,63 @@
+"""Unit tests for the trip-count-aware HLO analyzer on synthetic HLO text."""
+from repro.launch import hlo_analysis as ha
+
+SYNTH = """\
+HloModule jit_f
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %d = f32[128,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128]{1,0} all-reduce(%d), to_apply=%sum, replica_groups={}
+  ROOT %t = (s32[], f32[128,128]{1,0}) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[128,128])) -> pred[] {
+  %p = (s32[], f32[128,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,128]) -> f32[128,128] {
+  %x = f32[128,128]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[128,128]{1,0}) tuple(%c0, %x)
+  %wh = (s32[], f32[128,128]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %ag = f32[256,128]{1,0} all-gather(%x), channel_id=1, dimensions={0}
+  ROOT %out = f32[128,128]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_trip_count_multiplies_body():
+    res = ha.analyze_hlo(SYNTH)
+    # one 128x128x128 dot per iteration, 5 iterations
+    assert res["flops"] == 5 * 2 * 128 * 128 * 128
+    assert res["while_trips"] == [5]
+
+
+def test_collectives_counted_with_multiplicity():
+    res = ha.analyze_hlo(SYNTH)
+    coll = res["collectives"]
+    # all-reduce inside the loop: 5 x 128*128*4 bytes
+    assert coll.bytes_by_op["all-reduce"] == 5 * 128 * 128 * 4
+    assert coll.count_by_op["all-reduce"] == 5
+    # all-gather at entry: once, result buffer 256*128*4
+    assert coll.bytes_by_op["all-gather"] == 256 * 128 * 4
+
+
+def test_shape_bytes():
+    assert ha._shape_bytes("bf16", "16,4096,8192") == 16 * 4096 * 8192 * 2
+    assert ha._shape_bytes("f32", "") == 4
+    assert ha._shape_bytes("weird", "8") == 0
+
+
+def test_roofline_terms_bottleneck():
+    t = ha.roofline_terms(flops=197e12, bytes_accessed=819e9 * 2,
+                          collective_bytes=50e9)
+    assert t["bottleneck"] == "memory"
+    assert abs(t["memory_s"] - 2.0) < 1e-9
+    assert t["step_time_lower_bound_s"] == t["memory_s"]

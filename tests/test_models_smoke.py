@@ -1,0 +1,176 @@
+"""Per-arch smoke tests: REDUCED variants (2 layers, d_model<=512,
+<=4 experts) run one forward/train step on CPU asserting output shapes and
+no NaNs, plus the decode-vs-prefill logit-equivalence invariant."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
+from repro.models import get_api, param_count
+from repro.models.model import pad_cache
+from repro.optim import adamw
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=16):
+    t = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    b = {"tokens": t, "labels": t}
+    if cfg.arch_type == "vlm":
+        b["tokens"] = b["tokens"][:, :S - cfg.n_img_tokens]
+        b["labels"] = b["labels"][:, :S - cfg.n_img_tokens]
+        b["img_embeds"] = jnp.full((B, cfg.n_img_tokens, cfg.d_model), 0.01)
+    if cfg.arch_type == "audio":
+        b["frames"] = 0.02 * jax.random.normal(
+            KEY, (B, cfg.enc_frames, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_reduced_config_limits(arch):
+    cfg = smoke_config(arch)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    # same family as the full config
+    assert cfg.arch_type == get_config(arch).arch_type
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    api = get_api(cfg)
+    params = api.init_params(KEY, cfg)
+    assert param_count(params) > 0
+    batch = make_batch(cfg)
+    loss, _ = api.loss_fn(params, cfg, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+
+    opt = adamw(lr=1e-3)
+    state = opt.init(params)
+    (l0, _), grads = jax.value_and_grad(api.loss_fn, has_aux=True)(
+        params, cfg, batch)
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0, f"{arch}: zero gradients"
+    new_params, _ = opt.update(params, grads, state)
+    l1, _ = api.loss_fn(new_params, cfg, batch)
+    assert jnp.isfinite(l1)
+    assert float(l1) < float(l0) + 0.5       # sane step
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_prefill(arch):
+    """The strongest serving invariant: incremental decode with a cache
+    reproduces full-prefill logits (capacity dropping disabled for MoE)."""
+    cfg = smoke_config(arch).replace(capacity_factor=1000.0)
+    api = get_api(cfg)
+    params = api.init_params(KEY, cfg)
+    B, S0, S1 = 2, 8, 11
+    toks = jax.random.randint(KEY, (B, S1), 0, cfg.vocab_size)
+    off = cfg.n_img_tokens if cfg.arch_type == "vlm" else 0
+
+    def mk(t):
+        b = {"tokens": t, "labels": t}
+        if cfg.arch_type == "vlm":
+            b["img_embeds"] = jnp.full((B, cfg.n_img_tokens, cfg.d_model),
+                                       0.01)
+        if cfg.arch_type == "audio":
+            b["frames"] = 0.02 * jax.random.normal(
+                KEY, (B, cfg.enc_frames, cfg.d_model))
+        return b
+
+    _, caches = api.prefill_fn(params, cfg, mk(toks[:, :S0]))
+    caches = pad_cache(caches, S0 + off, S1 + off)
+    for t in range(S0, S1):
+        lg_dec, caches = api.decode_fn(params, cfg, toks[:, t:t + 1],
+                                       jnp.int32(t + off), caches)
+        lg_ref, _ = api.prefill_fn(params, cfg, mk(toks[:, :t + 1]))
+        err = float(jnp.max(jnp.abs(lg_dec[:, 0, :cfg.vocab_size]
+                                    - lg_ref[:, 0, :cfg.vocab_size])))
+        assert err < 2e-3, f"{arch}: decode/prefill mismatch {err}"
+
+
+def test_moe_capacity_drops_tokens():
+    """With a tight capacity factor the MoE must drop (not crash)."""
+    cfg = smoke_config("qwen2-moe-a2.7b").replace(capacity_factor=0.5)
+    api = get_api(cfg)
+    params = api.init_params(KEY, cfg)
+    loss, _ = api.loss_fn(params, cfg, make_batch(cfg, B=2, S=32))
+    assert jnp.isfinite(loss)
+
+
+def test_vlm_image_tokens_excluded_from_loss():
+    cfg = smoke_config("phi-3-vision-4.2b")
+    api = get_api(cfg)
+    params = api.init_params(KEY, cfg)
+    b = make_batch(cfg)
+    # all text labels masked -> loss only counts... nothing: should be 0
+    b2 = dict(b)
+    b2["labels"] = -jnp.ones_like(b["labels"])
+    loss, _ = api.loss_fn(params, cfg, b2)
+    assert float(loss) == 0.0
+
+
+def test_sliding_window_decode_limits_context():
+    """With window W, tokens older than W are invisible to decode."""
+    cfg = smoke_config("qwen1.5-0.5b").replace(sliding_window=4)
+    api = get_api(cfg)
+    params = api.init_params(KEY, cfg)
+    B, W = 1, 4
+    toks = jax.random.randint(KEY, (B, 12), 0, cfg.vocab_size)
+    caches = api.init_cache_fn(params, cfg, B, W, jnp.float32)
+    # decode the same final token after two different early prefixes;
+    # with window 4, logits at step 11 must be identical
+    outs = []
+    for variant in range(2):
+        tt = toks.at[:, 0].set(variant)        # differ only at position 0
+        c = jax.tree.map(jnp.copy, caches)
+        lg = None
+        for t in range(12):
+            lg, c = api.decode_fn(params, cfg, tt[:, t:t + 1],
+                                  jnp.int32(t), c)
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(outs[0] - outs[1])))
+    assert err < 1e-5, f"window leak: {err}"
+
+
+def test_moe_expert_padding_is_noop_numerically():
+    """pad_experts_to: dummy experts must never receive tokens — loss on
+    the same batch must match the unpadded model when real-expert weights
+    coincide."""
+    import numpy as np
+    cfg = smoke_config("qwen2-moe-a2.7b").replace(capacity_factor=1000.0)
+    api = get_api(cfg)
+    params = api.init_params(KEY, cfg)
+    cfg_pad = cfg.replace(pad_experts_to=6)      # 4 real + 2 dummies
+    params_pad = api.init_params(KEY, cfg_pad)
+
+    def graft(a, b):
+        """copy real-expert slices of the unpadded params into the padded"""
+        if a.ndim >= 1 and b.ndim == a.ndim and a.shape != b.shape:
+            out = b
+            sl = tuple(slice(0, s) for s in a.shape)
+            return out.at[sl].set(a)
+        return a if a.shape == b.shape else b
+
+    params_pad = jax.tree.map(graft, params, params_pad)
+    batch = make_batch(cfg, B=2, S=16)
+    l0, _ = api.loss_fn(params, cfg, batch)
+    l1, _ = api.loss_fn(params_pad, cfg_pad, batch)
+    # aux-loss term differs slightly (E factor); compare the CE part via
+    # logits-free proxy: losses must be close since dummies get -inf router
+    assert abs(float(l0) - float(l1)) < 0.05, (float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "zamba2-7b"])
+def test_use_pallas_matches_jnp_path(arch):
+    """cfg.use_pallas routes attention / gated-norm through the Pallas
+    kernels (interpret mode on CPU) — losses must match the jnp path."""
+    cfg = smoke_config(arch)
+    api = get_api(cfg)
+    params = api.init_params(KEY, cfg)
+    batch = make_batch(cfg, B=1, S=128)   # 128-aligned for the kernel path
+    l_jnp, _ = api.loss_fn(params, cfg, batch)
+    l_pal, _ = api.loss_fn(params, cfg.replace(use_pallas=True), batch)
+    assert abs(float(l_jnp) - float(l_pal)) < 2e-4, (float(l_jnp),
+                                                     float(l_pal))

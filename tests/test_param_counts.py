@@ -1,0 +1,58 @@
+"""Full-config parameter counts (via eval_shape — no allocation).
+
+Regression-pins the model zoo against the assignment's nominal sizes.
+[audio]/[vlm] archs count the transformer backbone only (frontends are
+stubs per the carve-out), so e.g. phi-3-vision-4.2b's 3.8B excludes the
+~0.4B CLIP tower.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import active_param_count, get_api
+
+EXPECTED = {
+    # arch: (total params, tolerance)
+    "zamba2-7b": (6.79e9, 0.02),
+    "phi-3-vision-4.2b": (3.82e9, 0.02),     # backbone only
+    "qwen3-0.6b": (0.596e9, 0.03),
+    "deepseek-v2-lite-16b": (15.7e9, 0.03),
+    "qwen2-moe-a2.7b": (14.3e9, 0.03),
+    "smollm-135m": (0.135e9, 0.03),
+    "xlstm-1.3b": (2.9e9, 0.05),
+    "whisper-medium": (0.81e9, 0.10),        # padded vocab, untied head
+    "qwen1.5-0.5b": (0.46e9, 0.03),
+    "qwen1.5-110b": (111.2e9, 0.02),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_full_config_param_count(arch):
+    cfg = get_config(arch)
+    api = get_api(cfg)
+    shapes = jax.eval_shape(lambda k: api.init_params(k, cfg),
+                            jax.random.key(0))
+    total = sum(x.size for x in jax.tree.leaves(shapes))
+    want, tol = EXPECTED[arch]
+    assert abs(total - want) / want < tol, (arch, total, want)
+
+
+def test_moe_active_params_below_total():
+    for arch in ("deepseek-v2-lite-16b", "qwen2-moe-a2.7b"):
+        cfg = get_config(arch)
+        api = get_api(cfg)
+        shapes = jax.eval_shape(lambda k: api.init_params(k, cfg),
+                                jax.random.key(0))
+        total = sum(x.size for x in jax.tree.leaves(shapes))
+        active = active_param_count(shapes, cfg)
+        assert active < 0.5 * total, (arch, active, total)
+
+
+def test_deepseek_active_matches_a2_4b():
+    """V2-Lite activates ~2.4B params/token (model card)."""
+    cfg = get_config("deepseek-v2-lite-16b")
+    api = get_api(cfg)
+    shapes = jax.eval_shape(lambda k: api.init_params(k, cfg),
+                            jax.random.key(0))
+    active = active_param_count(shapes, cfg)
+    assert 1.8e9 < active < 3.2e9, active

@@ -1,0 +1,91 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import alpha_fair_probs
+from repro.core.auctions import (budget_fair_auction, gmmfair,
+                                 maxmin_fair_auction)
+from repro.core.fairness import cosine_uniformity
+from repro.fed.server import aggregate
+
+losses_st = st.lists(st.floats(0.01, 10.0), min_size=2, max_size=8)
+alpha_st = st.floats(1.0, 20.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(losses_st, alpha_st)
+def test_alpha_fair_probs_valid_distribution(losses, alpha):
+    p = np.asarray(alpha_fair_probs(jnp.array(losses), alpha))
+    assert np.all(p >= -1e-7)
+    assert np.isclose(p.sum(), 1.0, atol=1e-5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(losses_st, alpha_st)
+def test_alpha_fair_probs_order_preserving(losses, alpha):
+    """Higher loss never gets lower probability (monotone in f_s)."""
+    p = np.asarray(alpha_fair_probs(jnp.array(losses), alpha))
+    order_l = np.argsort(losses)
+    assert np.all(np.diff(p[order_l]) >= -1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 20), st.integers(2, 4),
+       st.floats(0.1, 20.0), st.integers(0, 10_000))
+def test_auction_budgets_and_ir(n, S, budget, seed):
+    """All auctions: budget feasibility + individual rationality."""
+    rng = np.random.default_rng(seed)
+    bids = rng.random((n, S)) + 0.01
+    for res in (budget_fair_auction(bids, budget), gmmfair(bids, budget),
+                maxmin_fair_auction(bids, budget)):
+        assert res.spent <= budget * (1 + 1e-6)
+        for s in range(S):
+            for u in res.winners[s]:
+                assert res.payments[s][u] >= bids[u, s] - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 20), st.floats(0.1, 30.0), st.integers(0, 10_000))
+def test_gmmfair_equal_take_up(n, budget, seed):
+    """Algorithm 2 adds one user to EVERY task per round -> equal counts."""
+    rng = np.random.default_rng(seed)
+    bids = rng.random((n, 3)) + 0.01
+    res = gmmfair(bids, budget)
+    assert res.take_up.max() - res.take_up.min() == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(0, 10_000))
+def test_aggregate_convex_combination(K, dim, seed):
+    """FedAvg output lies in the convex hull of the cohort (per coord)."""
+    rng = np.random.default_rng(seed)
+    cohort = {"x": jnp.asarray(rng.normal(size=(K, dim)))}
+    w = jnp.asarray(rng.random(K) + 1e-3)
+    out = np.asarray(aggregate(cohort, w)["x"])
+    lo = np.asarray(cohort["x"]).min(axis=0) - 1e-6
+    hi = np.asarray(cohort["x"]).max(axis=0) + 1e-6
+    assert np.all(out >= lo) and np.all(out <= hi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0.01, 1.0), min_size=2, max_size=6))
+def test_cosine_uniformity_bounds(vals):
+    c = cosine_uniformity(vals)
+    assert 0.0 < c <= 1.0 + 1e-9
+    # exactly 1 iff all equal
+    assert cosine_uniformity([vals[0]] * len(vals)) > 1 - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_allocation_sampling_matches_probs(seed):
+    """Empirical allocation frequencies track Eq. 4 (chi-square-ish)."""
+    key = jax.random.PRNGKey(seed)
+    losses = jnp.array([0.3, 0.9])
+    p = np.asarray(alpha_fair_probs(losses, 3.0))
+    from repro.core.allocation import allocate_fedfair
+    a = np.asarray(allocate_fedfair(key, losses, 2000, 3.0))
+    freq = np.bincount(a, minlength=2) / 2000
+    assert np.abs(freq - p).max() < 0.06

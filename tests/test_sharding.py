@@ -1,0 +1,162 @@
+"""Partition rules + a real multi-device jit through the production code
+path (subprocess with 8 host devices, 4x2 mesh)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
+from repro.models import get_api
+from repro.sharding import partition as part
+
+
+class FakeMesh:
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        self.shape = dict(sizes)
+        self.devices = np.empty(tuple(sizes.values()))
+
+
+def setup_sizes():
+    part.clear_sharding_ctx()
+    part._CTX["axis_sizes"] = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_divisible(arch):
+    """Every sharded axis divides its dim for the FULL config — the
+    invariant the 16x16 dry-run relies on."""
+    setup_sizes()
+    cfg = get_config(arch).replace(param_dtype="bfloat16")
+    api = get_api(cfg)
+    shapes = jax.eval_shape(lambda k: api.init_params(k, cfg),
+                            jax.random.key(0))
+    specs = part.tree_param_specs(shapes, cfg)
+
+    def check(path, leaf, spec):
+        assert len(spec) == len(leaf.shape), (path, spec, leaf.shape)
+        for dim, names in zip(leaf.shape, spec):
+            if names is None:
+                continue
+            ns = (names,) if isinstance(names, str) else names
+            size = int(np.prod([16 for _ in ns]))
+            assert dim % size == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), shapes, specs)
+    part.clear_sharding_ctx()
+
+
+def test_big_weights_are_sharded():
+    """The embedding and FFN weights of the 110b config must actually be
+    2-D sharded (not silently replicated)."""
+    setup_sizes()
+    cfg = get_config("qwen1.5-110b")
+    api = get_api(cfg)
+    shapes = jax.eval_shape(lambda k: api.init_params(k, cfg),
+                            jax.random.key(0))
+    specs = part.tree_param_specs(shapes, cfg)
+    emb = specs["emb"]["tok"]
+    assert emb == P("model", "data")
+    blk = specs["dense_layers"]
+    assert blk["ffn"]["gate"] == P(None, "data", "model")
+    assert blk["ffn"]["down"] == P(None, "model", "data")
+    part.clear_sharding_ctx()
+
+
+def test_expert_parallel_when_divisible():
+    setup_sizes()
+    cfg = get_config("deepseek-v2-lite-16b")      # 64 experts % 16 == 0
+    spec = part.param_spec(
+        (jax.tree_util.DictKey("moe_layers"), jax.tree_util.DictKey("ffn"),
+         jax.tree_util.DictKey("gate")),
+        jax.ShapeDtypeStruct((26, 64, 2048, 1408), "bfloat16"), cfg)
+    assert spec[1] == "model"                     # E axis sharded
+    cfg2 = get_config("qwen2-moe-a2.7b")          # 60 experts: fallback
+    spec2 = part.param_spec(
+        (jax.tree_util.DictKey("moe_layers"), jax.tree_util.DictKey("ffn"),
+         jax.tree_util.DictKey("gate")),
+        jax.ShapeDtypeStruct((24, 60, 2048, 1408), "bfloat16"), cfg2)
+    assert spec2[1] is None and spec2[3] == "model"   # ff axis instead
+    part.clear_sharding_ctx()
+
+
+def test_constrain_noop_without_ctx():
+    part.clear_sharding_ctx()
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert part.constrain(x, "activation") is x
+
+
+SUBPROCESS_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.configs import smoke_config
+    from repro.models import get_api
+    from repro.sharding import partition as part
+    from repro.optim import adamw
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    cfg = smoke_config("qwen3-0.6b").replace(
+        d_model=128, n_heads=4, n_kv_heads=2, head_dim=32, d_ff=128,
+        vocab_size=256)
+    api = get_api(cfg)
+    part.set_axis_sizes(mesh)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    specs = part.tree_param_specs(params, cfg)
+    params = jax.device_put(params, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs))
+    opt = adamw(lr=1e-3)
+    state = opt.init(params)
+    B, S = 8, 16
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    batch = jax.device_put(batch, NamedSharding(mesh, P("data", None)))
+
+    def train_step(p, o, b):
+        (l, _), g = jax.value_and_grad(api.loss_fn, has_aux=True)(p, cfg, b)
+        np_, no = opt.update(p, g, o)
+        return l, np_, no
+
+    with mesh:
+        loss, params, state = jax.jit(train_step)(params, state, batch)
+    assert jnp.isfinite(loss), loss
+    print("SHARDED_OK", float(loss))
+""")
+
+
+def test_sharded_train_step_8_devices():
+    """Real SPMD execution (not just lowering) on an 8-device host mesh."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run([sys.executable, "-c", SUBPROCESS_PROG],
+                          capture_output=True, text=True, timeout=300,
+                          env=env, cwd=os.path.dirname(
+                              os.path.dirname(os.path.abspath(__file__))))
+    assert "SHARDED_OK" in proc.stdout, proc.stderr[-2000:]
+
+
+def test_dryrun_results_if_present():
+    """If the dry-run sweep has produced results, every record must be ok
+    (sharding/OOM failures there are bugs in this system)."""
+    base = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "results", "dryrun")
+    if not os.path.isdir(base) or not os.listdir(base):
+        pytest.skip("dry-run sweep not yet run")
+    bad = []
+    for f in os.listdir(base):
+        if f.endswith(".json"):
+            rec = json.load(open(os.path.join(base, f)))
+            if not rec.get("ok"):
+                bad.append((f, rec.get("error", "")[:100]))
+    assert not bad, bad
