@@ -7,13 +7,16 @@ the CSV gate in benchmarks/run.py; default sizes mirror the paper.
 """
 from __future__ import annotations
 
+import json
+
 import numpy as np
 
 from repro.core.allocation import AllocationStrategy
 from repro.core.auctions import (budget_fair_auction, gmmfair,
                                  greedy_within_budget, maxmin_fair_auction,
                                  random_within_budget, val_threshold)
-from repro.fed import MMFLTrainer, TrainConfig, standard_tasks
+from repro.fed import (AsyncConfig, AsyncMMFLEngine, MMFLTrainer,
+                       TrainConfig, client_speeds, standard_tasks)
 
 STRATS = [AllocationStrategy.FEDFAIR, AllocationStrategy.RANDOM,
           AllocationStrategy.ROUND_ROBIN]
@@ -212,6 +215,82 @@ def exp7_stragglers(fast=True, seeds=(0, 1)):
                 "min_acc": float(np.mean(mins)),
                 "var_acc": float(np.mean(variances)),
             }
+    return out
+
+
+def _time_to_target(times, min_acc, target):
+    """First virtual time at which the RUNNING BEST min-accuracy reaches
+    the target (None if never)."""
+    if len(times) == 0:
+        return None
+    best = np.maximum.accumulate(min_acc)
+    hit = np.nonzero(best >= target)[0]
+    return float(times[hit[0]]) if len(hit) else None
+
+
+def exp9_async_vs_sync(fast=True, seeds=(0, 1), target=0.55,
+                       json_path="BENCH_async.json"):
+    """Async-engine headline: sync lockstep rounds vs the FedAST-style
+    staleness-aware async engine under heterogeneous (bimodal) client
+    speeds, matched on TOTAL client updates. Sync pays the straggler
+    barrier (each round costs the slowest participant); async pays only
+    per-client durations. Reports virtual time-to-min-accuracy and the
+    fairness spread (variance across task accuracies), and writes
+    BENCH_async.json for the CI artifact trail."""
+    K = 20
+    rounds = 15 if fast else 60
+    participation = 0.5
+    profile, spread = "bimodal", 4.0
+    tau = 3
+    m = max(1, int(round(participation * K)))
+    arrivals = rounds * m                  # matched update budget
+    tasks = standard_tasks(["synth-mnist", "synth-fmnist"], n_clients=K,
+                           seed=0, n_range=(60, 90))
+    agg = {k: {"t2a": [], "min_acc": [], "var_acc": [], "vtime": []}
+           for k in ("sync_fedfair", "async_fedfair", "async_random")}
+    for seed in seeds:
+        speeds = client_speeds(profile, K,
+                               np.random.default_rng(seed + 1),
+                               spread=spread)
+        cfg = TrainConfig(rounds=rounds, participation=participation,
+                          tau=tau, seed=seed,
+                          strategy=AllocationStrategy.FEDFAIR)
+        h = MMFLTrainer(tasks, cfg).run()
+        # lockstep round duration = the slowest participating client
+        round_t = np.array([
+            (1.0 / speeds[row >= 0]).max() if (row >= 0).any() else 0.0
+            for row in h.alloc])
+        t = np.cumsum(round_t)
+        agg["sync_fedfair"]["t2a"].append(_time_to_target(t, h.min_acc,
+                                                          target))
+        agg["sync_fedfair"]["min_acc"].append(h.min_acc[-1])
+        agg["sync_fedfair"]["var_acc"].append(h.var_acc[-1])
+        agg["sync_fedfair"]["vtime"].append(float(t[-1]))
+        for name, strat in (("async_fedfair", AllocationStrategy.FEDFAIR),
+                            ("async_random", AllocationStrategy.RANDOM)):
+            acfg = AsyncConfig(total_arrivals=arrivals, buffer_size=5,
+                               beta=0.5, tau=tau, seed=seed,
+                               strategy=strat, speed_profile=profile,
+                               speed_spread=spread)
+            ha = AsyncMMFLEngine.from_fed_tasks(tasks, acfg).run()
+            agg[name]["t2a"].append(_time_to_target(ha.time, ha.min_acc,
+                                                    target))
+            agg[name]["min_acc"].append(ha.min_acc[-1])
+            agg[name]["var_acc"].append(ha.var_acc[-1])
+            agg[name]["vtime"].append(float(ha.time[-1]))
+
+    def _mean(vals):
+        vals = [v for v in vals if v is not None]
+        return float(np.mean(vals)) if vals else None
+
+    out = {name: {k: _mean(v) for k, v in d.items()}
+           for name, d in agg.items()}
+    out["config"] = {"clients": K, "rounds": rounds, "arrivals": arrivals,
+                     "profile": profile, "spread": spread,
+                     "target_min_acc": target, "seeds": list(seeds)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
     return out
 
 

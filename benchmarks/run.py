@@ -51,6 +51,11 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="paper-sized experiment runs (slow)")
     ap.add_argument("--skip-experiments", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: async-vs-sync experiment + kernel "
+                         "microbench only (few rounds, tiny configs)")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the rows as JSON (CI artifact)")
     args = ap.parse_args()
     fast = not args.full
     rows = []
@@ -67,7 +72,10 @@ def main():
             ("exp6_alpha_sweep_techreport", E.exp6_alpha_sweep),
             ("exp7_stragglers_extension", E.exp7_stragglers),
             ("exp8_tau_sweep_extension", E.exp8_tau_sweep),
+            ("exp9_async_vs_sync_fedast", E.exp9_async_vs_sync),
         ]
+        if args.smoke:
+            specs = [("exp9_async_vs_sync_fedast", E.exp9_async_vs_sync)]
         for name, fn in specs:
             t0 = time.perf_counter()
             result = fn(fast=fast)
@@ -96,6 +104,12 @@ def main():
     for name, us, derived in rows:
         d = str(derived).replace(",", ";")
         print(f"{name},{us:.1f},{d}")
+
+    if args.json_out:
+        payload = {name: {"us_per_call": us, "derived": derived}
+                   for name, us, derived in rows}
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":

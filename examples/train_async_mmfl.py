@@ -1,0 +1,85 @@
+"""Asynchronous fair MMFL: FedAST-style buffered, staleness-aware training
+with on-the-fly alpha-fair task assignment — no round barrier.
+
+Clients have heterogeneous speeds (default: bimodal, 4x slow stragglers).
+Each completing client immediately draws its next task from Eq. 4 on
+prevailing losses; the server aggregates each task's buffer every B
+arrivals with staleness-discounted weights. Compare against the sync
+trainer on the same virtual clock — sync pays the straggler barrier
+(every round costs its slowest participant), async does not.
+
+    PYTHONPATH=src python examples/train_async_mmfl.py --arrivals 300
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.allocation import AllocationStrategy
+from repro.fed import (AsyncConfig, AsyncMMFLEngine, MMFLTrainer,
+                       TrainConfig, client_speeds, standard_tasks)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks",
+                    default="synth-mnist,synth-cifar,synth-fmnist")
+    ap.add_argument("--clients", type=int, default=24)
+    ap.add_argument("--arrivals", type=int, default=300)
+    ap.add_argument("--buffer", type=int, default=4)
+    ap.add_argument("--beta", type=float, default=0.5)
+    ap.add_argument("--alpha", type=float, default=3.0)
+    ap.add_argument("--strategy", default="fedfair",
+                    choices=[s.value for s in AllocationStrategy])
+    ap.add_argument("--speed-profile", default="bimodal",
+                    choices=["uniform", "bimodal", "lognormal"])
+    ap.add_argument("--speed-spread", type=float, default=4.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    names = args.tasks.split(",")
+    tasks = standard_tasks(names, n_clients=args.clients, seed=0,
+                           n_range=(60, 90))
+    cfg = AsyncConfig(total_arrivals=args.arrivals,
+                      buffer_size=args.buffer, beta=args.beta,
+                      alpha=args.alpha,
+                      strategy=AllocationStrategy(args.strategy),
+                      speed_profile=args.speed_profile,
+                      speed_spread=args.speed_spread,
+                      tau=3, seed=args.seed)
+    eng = AsyncMMFLEngine.from_fed_tasks(tasks, cfg)
+    print(f"async MMFL: {names} K={args.clients} B={args.buffer} "
+          f"beta={args.beta} profile={args.speed_profile}")
+    h = eng.run(verbose=True)
+    if len(h.time) == 0:
+        print(f"no aggregations: {args.arrivals} arrivals never filled a "
+              f"buffer of {args.buffer}; raise --arrivals or lower "
+              f"--buffer")
+        return
+    print(f"aggregations per task: {h.versions.tolist()}  "
+          f"arrivals per task: {h.arrivals.tolist()}")
+    print(f"mean buffer staleness: {h.staleness_mean.mean():.2f}  "
+          f"dropped: {h.dropped}")
+    print(f"async final accs: "
+          + " ".join(f"{a:.3f}" for a in h.acc[-1])
+          + f"  min={h.min_acc[-1]:.3f} var={h.var_acc[-1]:.4f} "
+          f"(virtual time {h.time[-1]:.1f})")
+
+    # sync reference on the same update budget + virtual clock
+    rounds = max(1, args.arrivals // args.clients)
+    sync_cfg = TrainConfig(rounds=rounds, participation=1.0, tau=3,
+                           seed=args.seed, alpha=args.alpha,
+                           strategy=AllocationStrategy(args.strategy))
+    hs = MMFLTrainer(tasks, sync_cfg).run()
+    speeds = client_speeds(args.speed_profile, args.clients,
+                           np.random.default_rng(args.seed + 1),
+                           spread=args.speed_spread)
+    sync_time = sum((1.0 / speeds[row >= 0]).max()
+                    for row in hs.alloc if (row >= 0).any())
+    print(f"sync  final accs: "
+          + " ".join(f"{a:.3f}" for a in hs.acc[-1])
+          + f"  min={hs.min_acc[-1]:.3f} var={hs.var_acc[-1]:.4f} "
+          f"(virtual time {sync_time:.1f}, straggler barrier)")
+
+
+if __name__ == "__main__":
+    main()

@@ -67,6 +67,24 @@ def allocate(key, strategy, losses, n_clients, alpha=3.0, round_idx=0):
     raise ValueError(strategy)
 
 
+def assign_completion(key, losses, elig_row, alpha):
+    """Async MMFL: sample the next task for ONE completing client — the
+    jit-friendly counterpart of ``MMFLCoordinator.assign_next`` for
+    compiled dispatch paths.
+
+    Eq. 4 on prevailing losses, renormalised over the client's eligible
+    tasks (auction outcome). elig_row: (S,) bool/0-1. Returns -1 when the
+    client is eligible for nothing (mirrors assign_next's None): the
+    auction outcome is never violated.
+    """
+    p = alpha_fair_probs(losses, alpha) * jnp.asarray(elig_row, jnp.float32)
+    tot = p.sum()
+    safe = jnp.where(tot > 0, p / jnp.maximum(tot, 1e-12),
+                     jnp.ones_like(p) / p.shape[0])
+    s = jax.random.categorical(key, jnp.log(jnp.maximum(safe, 1e-12)))
+    return jnp.where(tot > 0, s, -1)
+
+
 def selection_probability(losses, alpha, n_selected, n_clients):
     """B_Sel^s(alpha) (Eq. 7): probability that a specific |Sel|-subset is
     allocated to task s. Used by theory.py's convergence-bound terms."""

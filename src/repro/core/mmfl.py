@@ -39,6 +39,7 @@ class MMFLCoordinator:
     seed: int = 0
     eligibility: Optional[np.ndarray] = None      # (K, S) auction outcome
     _round: int = 0
+    _async_rr: int = 0
     tasks: Dict[str, TaskState] = field(default_factory=dict)
 
     def __post_init__(self):
@@ -60,15 +61,7 @@ class MMFLCoordinator:
     def next_round(self) -> Dict[str, np.ndarray]:
         """Returns task -> array of client ids allocated this round."""
         S = len(self.task_names)
-        finite = np.isfinite(self.losses)
-        losses = np.where(finite, self.losses, np.nanmax(
-            np.where(finite, self.losses, np.nan)) if finite.any() else 1.0)
-        if self.strategy == AllocationStrategy.RANDOM or not finite.any():
-            probs = np.ones(S) / S
-        elif self.strategy == AllocationStrategy.ROUND_ROBIN:
-            probs = None
-        else:
-            probs = np.asarray(alpha_fair_probs(losses, self.alpha))
+        probs = self._current_probs()
         m = max(1, int(round(self.participation * self.n_clients)))
         active = self._rng.choice(self.n_clients, size=m, replace=False)
         out = {n: [] for n in self.task_names}
@@ -90,6 +83,40 @@ class MMFLCoordinator:
         for n in self.task_names:
             self.tasks[n].clients_last_round = len(out[n])
         return {n: np.array(v, np.int64) for n, v in out.items()}
+
+    def _current_probs(self) -> Optional[np.ndarray]:
+        """Eq. 4 probabilities over tasks from prevailing losses, handling
+        not-yet-reported tasks. None means round-robin."""
+        S = len(self.task_names)
+        if self.strategy == AllocationStrategy.ROUND_ROBIN:
+            return None
+        finite = np.isfinite(self.losses)
+        if self.strategy == AllocationStrategy.RANDOM or not finite.any():
+            return np.ones(S) / S
+        losses = np.where(finite, self.losses,
+                          np.nanmax(np.where(finite, self.losses, np.nan)))
+        return np.asarray(alpha_fair_probs(losses, self.alpha))
+
+    def assign_next(self, client_id: int) -> Optional[int]:
+        """Async (FedAST-style) allocation: a COMPLETING client immediately
+        draws its next task from the alpha-fair distribution (Eq. 4) on
+        prevailing losses, restricted to its auction-eligible tasks — no
+        round barrier. Returns a task index, or None if the client is
+        eligible for nothing (it idles out of the pool)."""
+        elig = self.eligibility[client_id]
+        if not elig.any():
+            return None
+        S = len(self.task_names)
+        probs = self._current_probs()
+        if probs is None:                            # round robin
+            for off in range(S):
+                s = (self._async_rr + off) % S
+                if elig[s]:
+                    self._async_rr = (s + 1) % S
+                    return s
+        pe = probs * elig
+        pe = pe / pe.sum()
+        return int(self._rng.choice(S, p=pe))
 
     def client_weights(self, client_ids: np.ndarray,
                        p_k: Optional[np.ndarray] = None) -> np.ndarray:

@@ -1,0 +1,322 @@
+"""Event-driven asynchronous MMFL engine (FedAST-style, staleness-aware).
+
+The sync trainer's lockstep round barrier makes every task wait for the
+slowest selected client; with heterogeneous client speeds the barrier is
+the dominant cost and it starves hard tasks of update *rate*. This engine
+removes the barrier:
+
+  - a virtual-time event queue of client completions (per-client speed
+    drawn from a configurable heterogeneity profile);
+  - on completion a client is immediately re-assigned its next task by the
+    alpha-fair allocator (Eq. 4 on prevailing losses, restricted to the
+    auction eligibility matrix) — ``MMFLCoordinator.assign_next``;
+  - per-task BUFFERED aggregation: the server folds a task's buffer into
+    its global model every ``buffer_size`` arrivals (FedAST);
+  - STALENESS-weighted updates: an update computed from model version v
+    and applied at version V gets weight ∝ p_k / (1 + V - v)^beta
+    (``fed.server.staleness_weights``), applied to the client DELTA so
+    stale work nudges — not overwrites — the current model.
+
+Compute is lazy and batched: jobs carry only (client, task, version);
+the actual local training runs at flush time, grouped by dispatch version
+into ONE ``fed.trainer.cohort_update`` call per group — the same compiled
+entry point the sync driver uses. With equal client speeds and
+buffer_size == cohort size the engine reproduces the sync trainer's
+round exactly (tested to 1e-6).
+
+Tasks are pluggable via the ``AsyncTask`` adapter protocol, so the same
+engine drives the synthetic FedTask MLPs here and the multi-architecture
+LM tasks in ``launch/train.py --async``.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocation import AllocationStrategy
+from repro.core.mmfl import MMFLCoordinator
+from repro.fed.client import accuracy
+from repro.fed.data import FedTask
+from repro.fed.server import aggregate_stale
+from repro.fed.trainer import cohort_update, init_task_model, task_round_key
+
+
+@dataclass
+class AsyncConfig:
+    total_arrivals: int = 400      # client completions to process
+    buffer_size: int = 4           # B: aggregate every B arrivals per task
+    beta: float = 0.5              # staleness discount exponent
+    server_lr: float = 1.0         # eta on the aggregated buffer delta
+    alpha: float = 3.0
+    strategy: AllocationStrategy = AllocationStrategy.FEDFAIR
+    # client speed heterogeneity: "uniform" (all equal), "bimodal"
+    # (slow_fraction of clients are speed 1/speed_spread), "lognormal"
+    speed_profile: str = "uniform"
+    speed_spread: float = 4.0
+    slow_fraction: float = 0.5
+    max_staleness: Optional[int] = None   # drop updates staler than this
+    # local training (mirrors sync TrainConfig)
+    tau: int = 5
+    lr: float = 0.1
+    batch_size: int = 32
+    hidden: int = 64
+    depth: int = 2
+    deep_for: tuple = ("synth-cifar",)
+    deep_depth: int = 3
+    seed: int = 0
+
+
+def client_speeds(profile: str, n: int, rng: np.random.Generator,
+                  spread: float = 4.0, slow_fraction: float = 0.5
+                  ) -> np.ndarray:
+    """Per-client relative speeds > 0; a unit job takes 1/speed virtual
+    time. ``spread`` is the slow:fast ratio (bimodal) or the log-scale
+    dispersion anchor (lognormal)."""
+    if profile == "uniform":
+        return np.ones(n)
+    if profile == "bimodal":
+        speeds = np.ones(n)
+        slow = rng.random(n) < slow_fraction
+        speeds[slow] = 1.0 / spread
+        return speeds
+    if profile == "lognormal":
+        sigma = np.log(max(spread, 1.0 + 1e-6)) / 2.0
+        return rng.lognormal(mean=0.0, sigma=sigma, size=n)
+    raise ValueError(f"unknown speed profile: {profile!r}")
+
+
+class AsyncTask:
+    """Adapter protocol the engine drives. Implementations wrap either the
+    synthetic FedTask MLPs (``FedAsyncTask``) or arbitrary per-arch train
+    steps (see launch/train.py)."""
+
+    name: str
+    n_clients: int
+    p_k: np.ndarray          # (K,) base aggregation weights
+    work: float = 1.0        # virtual-time cost of one local job
+
+    def init(self, seed: int):
+        raise NotImplementedError
+
+    def update(self, params, seed: int, version: int, client_ids):
+        """Cohort pytree (leading axis len(client_ids)) of local updates
+        from ``params``; must be a function of (seed, version, client_ids)
+        only, so sync and async drivers agree."""
+        raise NotImplementedError
+
+    def evaluate(self, params) -> float:
+        """Prevailing f_s for Eq. 4 (lower is better; the paper uses
+        1 - test accuracy)."""
+        raise NotImplementedError
+
+
+class FedAsyncTask(AsyncTask):
+    """FedTask (synthetic MLP) adapter — reuses the sync trainer's compiled
+    cohort-update entry point and key derivation verbatim."""
+
+    def __init__(self, task: FedTask, task_idx: int, cfg: AsyncConfig):
+        self.task = task
+        self.task_idx = task_idx
+        self.cfg = cfg
+        self.name = task.name
+        self.n_clients = task.n_clients
+        self.p_k = task.p_k
+        self.work = 1.0
+
+    def init(self, seed: int):
+        return init_task_model(
+            self.task,
+            jax.random.fold_in(jax.random.PRNGKey(seed), self.task_idx),
+            self.cfg.hidden, self.cfg.depth, self.cfg.deep_for,
+            self.cfg.deep_depth)
+
+    def update(self, params, seed: int, version: int, client_ids):
+        return cohort_update(params, task_round_key(seed, self.task_idx,
+                                                    version),
+                             self.task, client_ids, self.cfg.tau,
+                             self.cfg.lr, self.cfg.batch_size)
+
+    def evaluate(self, params) -> float:
+        acc = float(accuracy(params, self.task.test_x, self.task.test_y))
+        return max(1.0 - acc, 1e-6)
+
+
+@dataclass
+class AsyncHistory:
+    time: np.ndarray            # (F,) virtual time of each flush
+    task: np.ndarray            # (F,) flushed task index
+    metric: np.ndarray          # (F, S) prevailing f_s after the flush
+    staleness_mean: np.ndarray  # (F,) mean staleness in the flushed buffer
+    arrivals: np.ndarray        # (S,) total completions per task
+    updates_per_client: np.ndarray  # (K,)
+    versions: np.ndarray        # (S,) final model versions
+    assignments: List[Tuple[int, int]]  # (client, task) dispatch log
+    dropped: int = 0            # updates discarded for exceeding staleness
+    acc: np.ndarray = field(init=False)       # 1 - f_s (fed tasks)
+    min_acc: np.ndarray = field(init=False)
+    var_acc: np.ndarray = field(init=False)
+
+    def __post_init__(self):
+        self.acc = 1.0 - self.metric
+        self.min_acc = self.acc.min(axis=1)
+        self.var_acc = self.acc.var(axis=1)
+
+
+@dataclass
+class _Job:
+    client: int
+    task: int
+    version: int       # model version the client trained FROM
+    dispatch_time: float
+
+
+class AsyncMMFLEngine:
+    """Virtual-time event loop: dispatch -> completion -> buffer -> flush.
+
+    All K clients train continuously (full async participation); each
+    completion immediately triggers the client's next fair assignment.
+    """
+
+    def __init__(self, tasks: Sequence[AsyncTask], cfg: AsyncConfig,
+                 eligibility: Optional[np.ndarray] = None):
+        self.tasks = list(tasks)
+        self.cfg = cfg
+        self.S = len(self.tasks)
+        self.K = self.tasks[0].n_clients
+        assert all(t.n_clients == self.K for t in self.tasks)
+        self.coord = MMFLCoordinator(
+            task_names=[t.name for t in self.tasks], n_clients=self.K,
+            alpha=cfg.alpha, strategy=cfg.strategy, seed=cfg.seed,
+            eligibility=eligibility)
+        self.speeds = client_speeds(
+            cfg.speed_profile, self.K, np.random.default_rng(cfg.seed + 1),
+            spread=cfg.speed_spread, slow_fraction=cfg.slow_fraction)
+
+    @classmethod
+    def from_fed_tasks(cls, tasks: Sequence[FedTask], cfg: AsyncConfig,
+                       eligibility: Optional[np.ndarray] = None
+                       ) -> "AsyncMMFLEngine":
+        return cls([FedAsyncTask(t, s, cfg) for s, t in enumerate(tasks)],
+                   cfg, eligibility)
+
+    # -- internals ---------------------------------------------------------
+
+    def _retain(self, s: int, version: int, params):
+        slot = self._retained[s].setdefault(version, [params, 0])
+        slot[1] += 1
+
+    def _release(self, s: int, version: int):
+        slot = self._retained[s][version]
+        slot[1] -= 1
+        if slot[1] == 0:
+            del self._retained[s][version]
+
+    def _dispatch(self, client: int, t: float):
+        s = self.coord.assign_next(client)
+        if s is None:
+            return                       # not eligible for anything: idle
+        v = self._version[s]
+        self._retain(s, v, self._params[s])
+        self._assignments.append((client, s))
+        dur = self.tasks[s].work / self.speeds[client]
+        self._seq += 1
+        heapq.heappush(self._events,
+                       (t + dur, self._seq, _Job(client, s, v, t)))
+
+    def _flush(self, s: int, t: float):
+        cfg = self.cfg
+        buf = self._buffers[s]
+        self._buffers[s] = []
+        cur = self._version[s]
+        kept: List[_Job] = []
+        for j in buf:
+            if (cfg.max_staleness is not None
+                    and cur - j.version > cfg.max_staleness):
+                self._dropped += 1
+                self._release(s, j.version)
+            else:
+                kept.append(j)
+        if kept:
+            # one compiled cohort call per distinct dispatch version
+            deltas, weights, stale = [], [], []
+            by_version: Dict[int, List[_Job]] = {}
+            for j in kept:
+                by_version.setdefault(j.version, []).append(j)
+            for v in sorted(by_version):
+                group = by_version[v]
+                ids = np.array([j.client for j in group], np.int64)
+                base = self._retained[s][v][0]
+                cohort = self.tasks[s].update(base, cfg.seed, v, ids)
+                for i, j in enumerate(group):
+                    deltas.append(jax.tree.map(
+                        lambda c, b: c[i] - b, cohort, base))
+                    weights.append(self.tasks[s].p_k[j.client])
+                    stale.append(cur - v)
+                    self._release(s, v)
+            stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                                   *deltas)
+            agg = aggregate_stale(stacked, np.asarray(weights, np.float32),
+                                  np.asarray(stale, np.float32), cfg.beta)
+            self._params[s] = jax.tree.map(
+                lambda p, d: p + cfg.server_lr * d, self._params[s], agg)
+            self._version[s] = cur + 1
+            self._metric[s] = self.tasks[s].evaluate(self._params[s])
+            self.coord.report(self.tasks[s].name, self._metric[s])
+            self._hist_time.append(t)
+            self._hist_task.append(s)
+            self._hist_metric.append(self._metric.copy())
+            self._hist_stale.append(float(np.mean(stale)))
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self, verbose: bool = False) -> AsyncHistory:
+        cfg = self.cfg
+        self._params = [t.init(cfg.seed) for t in self.tasks]
+        self._metric = np.array([t.evaluate(p) for t, p in
+                                 zip(self.tasks, self._params)])
+        for t, f in zip(self.tasks, self._metric):
+            self.coord.report(t.name, float(f))
+        self._version = [0] * self.S
+        self._buffers: List[List[_Job]] = [[] for _ in range(self.S)]
+        self._retained: List[Dict[int, list]] = [{} for _ in range(self.S)]
+        self._events: list = []
+        self._seq = 0
+        self._dropped = 0
+        self._assignments: List[Tuple[int, int]] = []
+        self._hist_time, self._hist_task = [], []
+        self._hist_metric, self._hist_stale = [], []
+        arrivals = np.zeros(self.S, np.int64)
+        per_client = np.zeros(self.K, np.int64)
+
+        for i in range(self.K):              # everyone starts training
+            self._dispatch(i, 0.0)
+
+        processed = 0
+        while processed < cfg.total_arrivals and self._events:
+            t, _, job = heapq.heappop(self._events)
+            processed += 1
+            arrivals[job.task] += 1
+            per_client[job.client] += 1
+            self._buffers[job.task].append(job)
+            if len(self._buffers[job.task]) >= cfg.buffer_size:
+                self._flush(job.task, t)
+            self._dispatch(job.client, t)
+            if verbose and processed % 50 == 0:
+                f = " ".join(f"{m:.3f}" for m in self._metric)
+                print(f"  arrival {processed:5d} t={t:8.2f} f_s=[{f}]")
+
+        return AsyncHistory(
+            time=np.array(self._hist_time),
+            task=np.array(self._hist_task, np.int64),
+            metric=(np.array(self._hist_metric)
+                    if self._hist_metric else
+                    np.zeros((0, self.S))),
+            staleness_mean=np.array(self._hist_stale),
+            arrivals=arrivals, updates_per_client=per_client,
+            versions=np.array(self._version, np.int64),
+            assignments=self._assignments, dropped=self._dropped)

@@ -65,13 +65,21 @@ def local_update(global_params, key, x, y, w, tau: int, lr,
 
 
 @partial(jax.jit, static_argnames=("tau", "batch_size"))
-def cohort_local_update(global_params, key, xs, ys, ws, tau: int, lr,
-                        batch_size: int = 32):
-    """All K clients in parallel from the SAME global params (vmap)."""
-    K = xs.shape[0]
-    keys = jax.random.split(key, K)
+def cohort_local_update_ids(global_params, key, xs, ys, ws, client_ids,
+                            tau: int, lr, batch_size: int = 32):
+    """Local updates for ONLY the given clients, vmapped from the same
+    global params.
+
+    Per-client randomness is ``fold_in(key, client_id)`` rather than a
+    positional split, so a client's update is independent of which other
+    clients share the call — the property that lets the synchronous round
+    loop and the async event engine consume the SAME compiled entry point
+    and produce identical per-client results.
+    """
+    keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(client_ids)
 
     def one(k, x, y, w):
         return local_update(global_params, k, x, y, w, tau, lr, batch_size)
 
-    return jax.vmap(one)(keys, xs, ys, ws)
+    return jax.vmap(one)(keys, xs[client_ids], ys[client_ids],
+                         ws[client_ids])

@@ -28,6 +28,39 @@ def aggregate(cohort_params, weights):
     return jax.tree.map(avg, cohort_params)
 
 
+def staleness_weights(weights, staleness, beta):
+    """FedAST-style staleness attenuation: w_j <- w_j / (1+s_j)^beta.
+
+    weights: (K,) base aggregation weights (e.g. p_k of the buffered
+    clients); staleness: (K,) int/float model-version lag of each update;
+    beta >= 0 controls how hard stale updates are discounted (beta=0
+    recovers plain FedAvg weighting).
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    staleness = jnp.asarray(staleness, jnp.float32)
+    return weights * (1.0 + staleness) ** (-beta)
+
+
+def aggregate_stale(cohort_params, weights, staleness, beta):
+    """Buffered async aggregation (Alg. 1 line 12 + staleness discount).
+
+    cohort_params: pytree with leading K axis of buffered client DELTAS.
+    Update j contributes w_j / (1+staleness_j)^beta, normalised by the
+    UNDISCOUNTED weight sum — so a uniformly stale buffer takes a
+    (1+s)^-beta-scaled step rather than having the discount cancel in a
+    renormalisation (stale work nudges, never overwrites). With all
+    staleness zero this reduces exactly to ``aggregate``.
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    disc = staleness_weights(weights, staleness, beta)
+    norm = disc / jnp.maximum(weights.sum(), 1e-12)
+
+    def avg(leaf):
+        return jnp.tensordot(norm, leaf, axes=(0, 0))
+
+    return jax.tree.map(avg, cohort_params)
+
+
 def selection_weights(alloc, task_id, p_k):
     """alloc: (K,) task ids; zero out clients not allocated to task_id."""
     sel = (alloc == task_id).astype(jnp.float32)

@@ -22,9 +22,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.allocation import AllocationStrategy, alpha_fair_probs
-from repro.fed.client import accuracy, cohort_local_update, init_mlp
+from repro.fed.client import accuracy, cohort_local_update_ids, init_mlp
 from repro.fed.data import FedTask
 from repro.fed.server import aggregate
+
+
+def task_round_key(seed: int, task_idx: int, version: int):
+    """PRNG key for (task, model-version) — version is the round index in
+    the sync driver and the aggregation count in the async engine. Both
+    drivers derive keys this way, so a cohort update is reproducible from
+    (seed, task, version, client_id) alone."""
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), task_idx)
+    return jax.random.fold_in(k, version)
+
+
+def init_task_model(task: FedTask, key, hidden: int, depth: int,
+                    deep_for=(), deep_depth: int = 3):
+    """Model init for ONE task ("bigger model for the harder task", as the
+    paper uses a ResNet for CIFAR)."""
+    base = task.name.split("#")[0]
+    d = deep_depth if base in deep_for else depth
+    return init_mlp(key, task.train_x.shape[-1], hidden, task.n_classes,
+                    depth=d)
+
+
+def init_task_models(tasks: List[FedTask], key, hidden: int, depth: int,
+                     deep_for=(), deep_depth: int = 3):
+    """Per-task model init shared by the sync trainer and async engine:
+    task s always gets key fold_in(key, s), so both drivers start from
+    identical models."""
+    return [init_task_model(t, jax.random.fold_in(key, s), hidden, depth,
+                            deep_for, deep_depth)
+            for s, t in enumerate(tasks)]
+
+
+def cohort_update(global_params, key, task: FedTask, client_ids,
+                  tau: int, lr, batch_size: int):
+    """Run tau local steps for the given clients of one task — the single
+    compiled call both the sync round loop and the async event engine go
+    through. Returns a cohort pytree with leading axis len(client_ids).
+
+    client_ids is padded to the next power of two (repeating the last id)
+    so XLA compiles at most log2(K)+1 cohort shapes per task instead of
+    one per distinct cohort size; fold_in keying makes the padded rows
+    exact duplicates, which are sliced off before returning.
+    """
+    ids = np.asarray(client_ids, np.int32)
+    n = len(ids)
+    padded = 1 << max(n - 1, 0).bit_length()
+    if padded > n:
+        ids = np.concatenate([ids, np.full(padded - n, ids[-1], np.int32)])
+    cohort = cohort_local_update_ids(
+        global_params, key, jnp.asarray(task.train_x),
+        jnp.asarray(task.train_y), jnp.asarray(task.train_w),
+        jnp.asarray(ids), tau, lr, batch_size)
+    return jax.tree.map(lambda leaf: leaf[:n], cohort)
 
 
 @dataclass
@@ -53,6 +105,7 @@ class TrainConfig:
 class History:
     acc: np.ndarray                     # (rounds, S)
     alloc_counts: np.ndarray            # (rounds, S)
+    alloc: Optional[np.ndarray] = None  # (rounds, K) task id / -1 idle
     min_acc: np.ndarray = field(init=False)
     var_acc: np.ndarray = field(init=False)
 
@@ -75,15 +128,9 @@ class MMFLTrainer:
                      if eligibility is None else eligibility.astype(bool))
 
     def _init_models(self, key):
-        params = []
-        for s, t in enumerate(self.tasks):
-            base = t.name.split("#")[0]
-            depth = (self.cfg.deep_depth
-                     if base in self.cfg.deep_for else self.cfg.depth)
-            key, k = jax.random.split(key)
-            params.append(init_mlp(k, t.train_x.shape[-1], self.cfg.hidden,
-                                   t.n_classes, depth=depth))
-        return params, key
+        return init_task_models(self.tasks, key, self.cfg.hidden,
+                                self.cfg.depth, self.cfg.deep_for,
+                                self.cfg.deep_depth)
 
     def _allocate(self, rng, losses, round_idx):
         """Per-client task assignment, honouring eligibility."""
@@ -120,13 +167,12 @@ class MMFLTrainer:
 
     def run(self, verbose: bool = False) -> History:
         cfg = self.cfg
-        key = jax.random.PRNGKey(cfg.seed)
         rng = np.random.default_rng(cfg.seed)
-        params, key = self._init_models(key)
+        params = self._init_models(jax.random.PRNGKey(cfg.seed))
         accs = np.zeros(self.S)
         for s, t in enumerate(self.tasks):
             accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
-        acc_hist, alloc_hist = [], []
+        acc_hist, alloc_hist, assign_hist = [], [], []
         for r in range(cfg.rounds):
             losses = np.maximum(1.0 - accs, 1e-6)   # paper: use test acc
             alloc = self._allocate(rng, losses, r)
@@ -135,21 +181,20 @@ class MMFLTrainer:
                 alloc = np.where(failed, -1, alloc)
             counts = np.array([(alloc == s).sum() for s in range(self.S)])
             for s, t in enumerate(self.tasks):
-                sel = alloc == s
-                if not sel.any():
+                sel_ids = np.where(alloc == s)[0]
+                if len(sel_ids) == 0:
                     continue
-                key, k = jax.random.split(key)
-                cohort = cohort_local_update(
-                    params[s], k, jnp.asarray(t.train_x),
-                    jnp.asarray(t.train_y), jnp.asarray(t.train_w),
+                cohort = cohort_update(
+                    params[s], task_round_key(cfg.seed, s, r), t, sel_ids,
                     cfg.tau, cfg.lr, cfg.batch_size)
-                w = jnp.asarray(sel.astype(np.float32) * t.p_k)
-                params[s] = aggregate(cohort, w)
+                params[s] = aggregate(cohort, jnp.asarray(t.p_k[sel_ids]))
                 accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
             acc_hist.append(accs.copy())
             alloc_hist.append(counts)
+            assign_hist.append(alloc.copy())
             if verbose and (r + 1) % 10 == 0:
                 print(f"  round {r+1:4d} accs="
                       + " ".join(f"{a:.3f}" for a in accs)
                       + f" min={accs.min():.3f}")
-        return History(np.array(acc_hist), np.array(alloc_hist))
+        return History(np.array(acc_hist), np.array(alloc_hist),
+                       alloc=np.array(assign_hist))

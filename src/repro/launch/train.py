@@ -24,6 +24,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.core.allocation import AllocationStrategy
 from repro.core.mmfl import MMFLCoordinator
+from repro.fed.trainer import task_round_key
 from repro.models import get_api
 from repro.optim import adamw
 
@@ -119,6 +120,99 @@ def assemble_batch(task, data, client_ids, weights, rng):
     return batch
 
 
+class ArchAsyncTask:
+    """AsyncTask adapter for one architecture: tau local SGD steps on the
+    completing client's token shards, vmapped per dispatch-version group —
+    the arch-level analogue of fed.trainer.cohort_update. Lets the
+    AsyncMMFLEngine drive the multi-arch production tasks with the same
+    event queue / buffer / staleness machinery as the synthetic tasks."""
+
+    def __init__(self, name, task_idx, task, data, tau=2, local_lr=5e-3):
+        self.name = name
+        self.task_idx = task_idx
+        self.task = task
+        self.data = data                      # (K, shards, seq)
+        self.n_clients = data.shape[0]
+        self.p_k = np.ones(self.n_clients) / self.n_clients
+        self.work = 1.0
+        cfg, api = task["cfg"], task["api"]
+        self._cfg = cfg
+
+        def one_client(params, key, toks):
+            batch = self._features(toks)
+            del key
+
+            def step(p, _):
+                (l, _), g = jax.value_and_grad(
+                    api.loss_fn, has_aux=True)(p, cfg, batch)
+                p = jax.tree.map(
+                    lambda pp, gg: (pp - local_lr * gg).astype(pp.dtype),
+                    p, g)
+                return p, l
+
+            p, ls = jax.lax.scan(step, params, None, length=tau)
+            return p, ls.mean()
+
+        self._cohort = jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0)))
+        self._eval_toks = jnp.asarray(
+            data[:, 0][: min(8, self.n_clients)] % cfg.vocab_size)
+        self._eval = jax.jit(
+            lambda p: api.loss_fn(p, cfg, self._features(self._eval_toks))[0])
+
+    def _features(self, toks):
+        cfg = self._cfg
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.arch_type == "vlm":
+            seq = toks.shape[-1]
+            batch["img_embeds"] = jnp.zeros(
+                toks.shape[:-1] + (cfg.n_img_tokens, cfg.d_model))
+            batch["tokens"] = toks[..., : seq - cfg.n_img_tokens]
+            batch["labels"] = toks[..., : seq - cfg.n_img_tokens]
+        if cfg.arch_type == "audio":
+            batch["frames"] = jnp.zeros(
+                toks.shape[:-1] + (cfg.enc_frames, cfg.d_model))
+        return batch
+
+    def init(self, seed):
+        del seed
+        return self.task["params"]
+
+    def update(self, params, seed, version, client_ids):
+        key = task_round_key(seed, self.task_idx, version)
+        keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(
+            jnp.asarray(client_ids))
+        toks = jnp.asarray(
+            self.data[np.asarray(client_ids)] % self._cfg.vocab_size)
+        cohort, _ = self._cohort(params, keys, toks)
+        return cohort
+
+    def evaluate(self, params) -> float:
+        return float(self._eval(params))
+
+
+def run_async(args, archs, tasks, data):
+    from repro.fed.async_engine import AsyncConfig, AsyncMMFLEngine
+
+    adapters = [ArchAsyncTask(a, i, tasks[a], data[a], tau=max(args.tau, 1))
+                for i, a in enumerate(archs)]
+    cfg = AsyncConfig(
+        total_arrivals=args.arrivals, buffer_size=args.buffer,
+        beta=args.beta, alpha=args.alpha,
+        strategy=AllocationStrategy(args.strategy),
+        speed_profile=args.speed_profile, speed_spread=args.speed_spread,
+        seed=args.seed)
+    eng = AsyncMMFLEngine(adapters, cfg)
+    print(f"ASYNC MMFL: {archs} buffer={args.buffer} beta={args.beta} "
+          f"profile={args.speed_profile} on {jax.device_count()} device(s)")
+    t0 = time.time()
+    hist = eng.run(verbose=True)
+    print(f"processed {int(hist.arrivals.sum())} arrivals "
+          f"({len(hist.time)} aggregations) in {time.time()-t0:.1f}s "
+          f"wall, {hist.time[-1] if len(hist.time) else 0.0:.1f} virtual")
+    print("final losses:", {a: round(eng.coord.tasks[a].loss, 3)
+                            for a in archs})
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs", default="smollm-135m,qwen3-0.6b")
@@ -137,6 +231,19 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--async", action="store_true", dest="async_mode",
+                    help="event-driven async engine (FedAST-style buffered "
+                         "staleness-aware aggregation) instead of "
+                         "lockstep rounds")
+    ap.add_argument("--arrivals", type=int, default=64,
+                    help="async: client completions to process")
+    ap.add_argument("--buffer", type=int, default=4,
+                    help="async: aggregate every B arrivals per task")
+    ap.add_argument("--beta", type=float, default=0.5,
+                    help="async: staleness discount exponent")
+    ap.add_argument("--speed-profile", default="bimodal",
+                    choices=["uniform", "bimodal", "lognormal"])
+    ap.add_argument("--speed-spread", type=float, default=4.0)
     args = ap.parse_args()
 
     archs = args.archs.split(",")
@@ -146,6 +253,9 @@ def main():
     data = {a: make_dataset(None, tasks[a]["cfg"], args.clients, 4,
                             args.seq, seed=args.seed + i)
             for i, a in enumerate(archs)}
+    if args.async_mode:
+        run_async(args, archs, tasks, data)
+        return
     coord = MMFLCoordinator(
         task_names=archs, n_clients=args.clients, alpha=args.alpha,
         strategy=AllocationStrategy(args.strategy),

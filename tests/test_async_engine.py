@@ -1,0 +1,230 @@
+"""Async MMFL engine: staleness weighting, buffered-aggregation
+sync-equivalence, on-the-fly fair allocation, heterogeneity profiles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.allocation import (AllocationStrategy, assign_completion,
+                                   alpha_fair_probs)
+from repro.core.mmfl import MMFLCoordinator
+from repro.fed import (AsyncConfig, AsyncMMFLEngine, MMFLTrainer,
+                       TrainConfig, client_speeds, standard_tasks)
+from repro.fed.server import aggregate, aggregate_stale, staleness_weights
+from repro.fed.trainer import (cohort_update, init_task_models,
+                               task_round_key)
+
+
+@pytest.fixture(scope="module")
+def two_tasks():
+    return standard_tasks(["synth-mnist", "synth-fmnist"], n_clients=16,
+                          seed=0, n_range=(50, 80))
+
+
+# ---------------------------------------------------------------- staleness
+
+def test_staleness_weights_decay():
+    w = np.ones(4, np.float32)
+    s = np.array([0.0, 1.0, 2.0, 5.0])
+    out = np.asarray(staleness_weights(w, s, beta=0.7))
+    assert np.isclose(out[0], 1.0)              # fresh update undiscounted
+    assert np.all(np.diff(out) < 0)             # monotone decay
+    np.testing.assert_allclose(out, (1.0 + s) ** -0.7, rtol=1e-6)
+
+
+def test_staleness_beta_zero_is_plain_fedavg():
+    w = np.array([0.2, 0.5, 0.3], np.float32)
+    s = np.array([0.0, 3.0, 9.0])
+    np.testing.assert_allclose(np.asarray(staleness_weights(w, s, 0.0)), w)
+
+
+def test_aggregate_stale_matches_manual():
+    """Discounted deltas normalised by the UNDISCOUNTED weight sum."""
+    cohort = jnp.arange(12.0).reshape(3, 4)
+    w = np.array([1.0, 1.0, 1.0], np.float32)
+    s = np.array([0.0, 1.0, 3.0])
+    beta = 1.0
+    eff = w / (1.0 + s)
+    expect = (eff[:, None] * np.asarray(cohort)).sum(0) / w.sum()
+    got = np.asarray(aggregate_stale(cohort, w, s, beta))
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+
+
+def test_aggregate_stale_uniform_staleness_damps_step():
+    """A uniformly stale buffer must take a SMALLER step, not have the
+    discount cancel in renormalisation."""
+    cohort = jnp.ones((4, 3))
+    w = np.ones(4, np.float32)
+    fresh = np.asarray(aggregate_stale(cohort, w, np.zeros(4), 0.5))
+    stale = np.asarray(aggregate_stale(cohort, w, np.full(4, 3.0), 0.5))
+    np.testing.assert_allclose(fresh, 1.0, rtol=1e-6)
+    np.testing.assert_allclose(stale, (1.0 + 3.0) ** -0.5, rtol=1e-6)
+
+
+# -------------------------------------------------- sync equivalence (B=K)
+
+def test_equal_speeds_full_buffer_equals_sync_round1():
+    """Acceptance: equal client speeds + buffer_size == cohort size ==>
+    the async engine's first aggregation reproduces the sync trainer's
+    round-1 params to 1e-6 (single task, full participation)."""
+    K = 10
+    tasks = standard_tasks(["synth-mnist"], n_clients=K, seed=0,
+                           n_range=(40, 60))
+    p0 = init_task_models(tasks, jax.random.PRNGKey(0), 64, 2)[0]
+    cohort = cohort_update(p0, task_round_key(0, 0, 0), tasks[0],
+                           np.arange(K), 3, 0.1, 32)
+    sync_p = aggregate(cohort, jnp.asarray(tasks[0].p_k))
+
+    cfg = AsyncConfig(total_arrivals=K, buffer_size=K, tau=3, seed=0,
+                      speed_profile="uniform")
+    eng = AsyncMMFLEngine.from_fed_tasks(tasks, cfg)
+    h = eng.run()
+    assert h.versions.tolist() == [1]
+    for a, b in zip(jax.tree_util.tree_leaves(sync_p),
+                    jax.tree_util.tree_leaves(eng._params[0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_disjoint_eligibility_sync_equivalence(two_tasks):
+    """Two tasks, each client eligible for exactly one: allocation is
+    forced in both drivers, so async-with-full-buffers == sync round 1."""
+    K = two_tasks[0].n_clients
+    elig = np.zeros((K, 2), bool)
+    elig[: K // 2, 0] = True
+    elig[K // 2:, 1] = True
+    cfg = TrainConfig(rounds=1, participation=1.0, tau=2, seed=0)
+    MMFLTrainer(two_tasks, cfg, eligibility=elig).run()
+
+    p0 = init_task_models(two_tasks, jax.random.PRNGKey(0), 64, 2,
+                          ("synth-cifar",), 3)
+    expect = []
+    for s, ids in ((0, np.arange(K // 2)), (1, np.arange(K // 2, K))):
+        cohort = cohort_update(p0[s], task_round_key(0, s, 0),
+                               two_tasks[s], ids, 2, 0.1, 32)
+        expect.append(aggregate(cohort,
+                                jnp.asarray(two_tasks[s].p_k[ids])))
+
+    acfg = AsyncConfig(total_arrivals=K, buffer_size=K // 2, tau=2,
+                       seed=0, speed_profile="uniform")
+    eng = AsyncMMFLEngine.from_fed_tasks(two_tasks, acfg,
+                                         eligibility=elig)
+    eng.run()
+    for s in range(2):
+        for a, b in zip(jax.tree_util.tree_leaves(expect[s]),
+                        jax.tree_util.tree_leaves(eng._params[s])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
+# ------------------------------------------------------------- fairness
+
+def test_async_fairness_spread_not_worse_than_random(two_tasks):
+    """Fair-async mode: alpha-fair on-the-fly allocation keeps the spread
+    across task accuracies no worse than random allocation, and the min
+    accuracy at least as good (seeded, tiny config tolerances)."""
+    res = {}
+    for name, strat in (("fedfair", AllocationStrategy.FEDFAIR),
+                        ("random", AllocationStrategy.RANDOM)):
+        var_tail, min_tail = [], []
+        for seed in (0, 1):
+            cfg = AsyncConfig(total_arrivals=160, buffer_size=4, tau=3,
+                              seed=seed, strategy=strat,
+                              speed_profile="bimodal")
+            h = AsyncMMFLEngine.from_fed_tasks(two_tasks, cfg).run()
+            var_tail.append(h.var_acc[-5:].mean())
+            min_tail.append(h.min_acc[-5:].mean())
+        res[name] = (np.mean(var_tail), np.mean(min_tail))
+    assert res["fedfair"][0] <= res["random"][0] + 1e-3
+    assert res["fedfair"][1] >= res["random"][1] - 0.02
+
+
+def test_fedfair_async_sends_more_arrivals_to_hard_task(two_tasks):
+    cfg = AsyncConfig(total_arrivals=200, buffer_size=4, tau=3, seed=0)
+    h = AsyncMMFLEngine.from_fed_tasks(two_tasks, cfg).run()
+    # synth-fmnist (task 1) is persistently harder -> more completions
+    assert h.arrivals[1] > h.arrivals[0]
+
+
+# ----------------------------------------------- heterogeneity & staleness
+
+def test_bimodal_speeds_fast_clients_contribute_more(two_tasks):
+    cfg = AsyncConfig(total_arrivals=160, buffer_size=4, tau=2, seed=0,
+                      speed_profile="bimodal", speed_spread=4.0)
+    eng = AsyncMMFLEngine.from_fed_tasks(two_tasks, cfg)
+    h = eng.run()
+    fast = eng.speeds == 1.0
+    slow = ~fast
+    assert fast.any() and slow.any()
+    assert (h.updates_per_client[fast].mean()
+            > 2.0 * h.updates_per_client[slow].mean())
+    assert h.staleness_mean.max() > 0        # buffers really go stale
+
+
+def test_speed_profiles():
+    rng = np.random.default_rng(0)
+    assert np.all(client_speeds("uniform", 10, rng) == 1.0)
+    bi = client_speeds("bimodal", 200, rng, spread=4.0, slow_fraction=0.5)
+    assert set(np.round(bi, 6)) == {0.25, 1.0}
+    ln = client_speeds("lognormal", 200, rng, spread=4.0)
+    assert np.all(ln > 0) and ln.std() > 0
+    with pytest.raises(ValueError):
+        client_speeds("warp", 4, rng)
+
+
+def test_max_staleness_drops_updates(two_tasks):
+    cfg = AsyncConfig(total_arrivals=200, buffer_size=4, tau=2, seed=0,
+                      speed_profile="bimodal", speed_spread=8.0,
+                      max_staleness=0)
+    h = AsyncMMFLEngine.from_fed_tasks(two_tasks, cfg).run()
+    assert h.dropped > 0                     # stale work discarded
+    assert len(h.time) > 0                   # ...but training continued
+    assert h.min_acc[-1] > 0.2
+
+
+# ----------------------------------------------- on-the-fly allocation
+
+def test_async_eligibility_respected(two_tasks):
+    K = two_tasks[0].n_clients
+    elig = np.zeros((K, 2), bool)
+    elig[: K // 2, 0] = True
+    elig[K // 2:, 1] = True
+    elig[0] = False                          # client 0 recruited nowhere
+    cfg = AsyncConfig(total_arrivals=80, buffer_size=3, tau=2, seed=0)
+    eng = AsyncMMFLEngine.from_fed_tasks(two_tasks, cfg, eligibility=elig)
+    h = eng.run()
+    assert all(elig[c, s] for c, s in h.assignments)
+    assert h.updates_per_client[0] == 0
+
+
+def test_coordinator_assign_next_prefers_worst_task():
+    c = MMFLCoordinator(["easy", "hard"], n_clients=10, alpha=8.0, seed=0)
+    c.report("easy", 0.1)
+    c.report("hard", 0.9)
+    picks = np.array([c.assign_next(i % 10) for i in range(200)])
+    assert (picks == 1).mean() > 0.9
+
+
+def test_coordinator_assign_next_round_robin_cycles():
+    c = MMFLCoordinator(["a", "b", "c"], n_clients=6, seed=0,
+                        strategy=AllocationStrategy.ROUND_ROBIN)
+    picks = [c.assign_next(0) for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+
+
+def test_assign_completion_jit_and_eligibility():
+    losses = jnp.array([0.5, 0.5, 0.5])
+    elig = jnp.array([0.0, 1.0, 0.0])
+    f = jax.jit(assign_completion)
+    picks = {int(f(jax.random.PRNGKey(i), losses, elig, 3.0))
+             for i in range(20)}
+    assert picks == {1}
+    # eligible for nothing -> -1 sentinel, never an ineligible task
+    assert int(f(jax.random.PRNGKey(0), losses, jnp.zeros(3), 3.0)) == -1
+    # matches Eq. 4 restricted+renormalised when all eligible
+    p = np.asarray(alpha_fair_probs(jnp.array([0.2, 0.8]), 3.0))
+    counts = np.zeros(2)
+    for i in range(400):
+        counts[int(assign_completion(jax.random.PRNGKey(i),
+                                     jnp.array([0.2, 0.8]),
+                                     jnp.ones(2), 3.0))] += 1
+    np.testing.assert_allclose(counts / counts.sum(), p, atol=0.08)

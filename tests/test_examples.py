@@ -2,6 +2,7 @@
 import os
 import subprocess
 import sys
+import tempfile
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -9,9 +10,20 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def run(args, timeout=420):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
-    return subprocess.run([sys.executable] + args, capture_output=True,
-                          text=True, timeout=timeout, env=env, cwd=ROOT)
+    # Force the CPU platform: with an unset JAX_PLATFORMS a libtpu install
+    # without TPU hardware spends minutes in init retry backoff.
+    env["JAX_PLATFORMS"] = "cpu"
+    # Redirect to files rather than capture_output pipes: on some sandboxed
+    # kernels a jax child writing to a pipe runs an order of magnitude
+    # slower than one writing to a file.
+    with tempfile.TemporaryFile("w+") as fo, \
+            tempfile.TemporaryFile("w+") as fe:
+        p = subprocess.run([sys.executable] + args, stdout=fo, stderr=fe,
+                           text=True, timeout=timeout, env=env, cwd=ROOT)
+        fo.seek(0)
+        fe.seek(0)
+        p.stdout, p.stderr = fo.read(), fe.read()
+    return p
 
 
 def test_auction_recruitment_example():
@@ -33,6 +45,24 @@ def test_serve_launcher_short():
              "--gen", "4"])
     assert p.returncode == 0, p.stderr[-1500:]
     assert "decoded" in p.stdout
+
+
+def test_train_async_mmfl_example_short():
+    p = run(["examples/train_async_mmfl.py", "--arrivals", "60",
+             "--clients", "10", "--tasks", "synth-mnist,synth-fmnist"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "async final accs" in p.stdout
+    assert "straggler barrier" in p.stdout
+
+
+def test_launch_train_async_mode():
+    """--async on the production launcher: event engine drives the arch
+    train tasks end-to-end."""
+    p = run(["-m", "repro.launch.train", "--archs", "smollm-135m",
+             "--async", "--arrivals", "9", "--clients", "6",
+             "--buffer", "3", "--seq", "32", "--batch", "4"])
+    assert p.returncode == 0, p.stderr[-1500:]
+    assert "final losses" in p.stdout
 
 
 def test_true_fedavg_tau_local_steps():

@@ -138,7 +138,9 @@ SUBPROCESS_PROG = textwrap.dedent("""
 def test_sharded_train_step_8_devices():
     """Real SPMD execution (not just lowering) on an 8-device host mesh."""
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    # 8 CPU host devices; forcing cpu also avoids minutes of TPU-init
+    # retry backoff on hosts with libtpu installed but no TPU.
+    env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run([sys.executable, "-c", SUBPROCESS_PROG],
                           capture_output=True, text=True, timeout=300,
                           env=env, cwd=os.path.dirname(
