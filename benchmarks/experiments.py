@@ -4,6 +4,11 @@ Synthetic stand-ins for MNIST/CIFAR/FMNIST/EMNIST (see DESIGN.md) — the
 claims validated are the paper's RELATIONS: min-accuracy ordering, variance
 ordering, auction take-up orderings. ``--fast`` shrinks rounds/clients for
 the CSV gate in benchmarks/run.py; default sizes mirror the paper.
+
+Every experiment is a ScenarioSpec sweep through ``repro.api.run_scenario``
+— the same declarative entry point the CLI uses — so a new scenario is a
+spec tweak, not driver plumbing. Auction mechanisms are resolved from the
+AUCTIONS registry.
 """
 from __future__ import annotations
 
@@ -11,36 +16,57 @@ import json
 
 import numpy as np
 
-from repro.core.allocation import AllocationStrategy
-from repro.core.auctions import (budget_fair_auction, gmmfair,
-                                 greedy_within_budget, maxmin_fair_auction,
-                                 random_within_budget, val_threshold)
-from repro.fed import (AsyncConfig, AsyncMMFLEngine, MMFLTrainer,
-                       TrainConfig, client_speeds, standard_tasks)
+from repro.api import (AUCTIONS, AllocationSpec, AuctionSpec,
+                       ClientPopulationSpec, RuntimeSpec, ScenarioSpec,
+                       TaskSpec, run_scenario)
+from repro.fed import client_speeds
 
-STRATS = [AllocationStrategy.FEDFAIR, AllocationStrategy.RANDOM,
-          AllocationStrategy.ROUND_ROBIN]
+STRATS = ["fedfair", "random", "round_robin"]
 
 
-def _run(tasks, strat, rounds, seeds, participation=0.35, tau=3, **kw):
-    hs = []
-    for seed in seeds:
-        cfg = TrainConfig(rounds=rounds, strategy=strat, seed=seed,
-                          participation=participation, tau=tau, **kw)
-        hs.append(MMFLTrainer(tasks, cfg).run())
-    return hs
+def _tasks(names, n_range):
+    return [TaskSpec(name=n, options={"n_range": list(n_range)})
+            for n in names]
+
+
+def _scenario(names, strat, rounds, seed, n_range=(150, 250),
+              participation=0.35, tau=3, alpha=3.0, dropout_prob=0.0,
+              auction=None, mode="sync", **runtime_kw):
+    return ScenarioSpec(
+        name=f"{strat}-s{seed}",
+        seed=seed,
+        data_seed=0,
+        tasks=_tasks(names, n_range),
+        clients=ClientPopulationSpec(n_clients=runtime_kw.pop("n_clients"),
+                                     participation=participation,
+                                     dropout_prob=dropout_prob,
+                                     **runtime_kw.pop("clients_kw", {})),
+        allocation=AllocationSpec(strategy=strat, alpha=alpha),
+        auction=auction,
+        runtime=RuntimeSpec(mode=mode, rounds=rounds, tau=tau,
+                            **runtime_kw))
+
+
+def _run(names, strat, rounds, seeds, n_clients, n_range=(150, 250),
+         participation=0.35, tau=3, **kw):
+    """One sync scenario per seed; returns the RunResults."""
+    return [run_scenario(_scenario(names, strat, rounds, seed,
+                                   n_range=n_range, n_clients=n_clients,
+                                   participation=participation, tau=tau,
+                                   **kw))
+            for seed in seeds]
 
 
 def exp1_difficulty(fast=True, seeds=(0, 1, 2)):
     """Fig. 2: 3 tasks of varying difficulty; min accuracy across tasks."""
     n_clients = 40 if fast else 120
     rounds = 25 if fast else 120
-    tasks = standard_tasks(["synth-mnist", "synth-cifar", "synth-fmnist"],
-                           n_clients=n_clients, seed=0)
+    names = ["synth-mnist", "synth-cifar", "synth-fmnist"]
     out = {}
     for strat in STRATS:
-        hs = _run(tasks, strat, rounds, seeds, participation=0.2)
-        out[strat.value] = {
+        hs = _run(names, strat, rounds, seeds, n_clients,
+                  participation=0.2)
+        out[strat] = {
             "min_acc": float(np.mean([h.min_acc[-1] for h in hs])),
             "mean_acc": float(np.mean([h.acc[-1].mean() for h in hs])),
             "var_acc": float(np.mean([h.var_acc[-1] for h in hs])),
@@ -59,11 +85,11 @@ def exp2_task_count(fast=True, seeds=(0, 1)):
     n_clients = 20
     out = {}
     for S in counts:
-        tasks = standard_tasks(names[:S], n_clients=n_clients, seed=0,
-                               n_range=(60, 90) if fast else (400, 600))
         for strat in STRATS:
-            hs = _run(tasks, strat, rounds, seeds, participation=1.0)
-            out[f"S{S}_{strat.value}"] = {
+            hs = _run(names[:S], strat, rounds, seeds, n_clients,
+                      n_range=(60, 90) if fast else (400, 600),
+                      participation=1.0)
+            out[f"S{S}_{strat}"] = {
                 "var_acc": float(np.mean([h.var_acc[-1] for h in hs])),
                 "min_acc": float(np.mean([h.min_acc[-1] for h in hs])),
             }
@@ -78,11 +104,11 @@ def exp3_client_count(fast=True, seeds=(0, 1)):
     rounds = 20 if fast else 120
     out = {}
     for K in counts:
-        tasks = standard_tasks(names, n_clients=K, seed=0,
-                               n_range=(60, 90) if fast else (200, 300))
         for strat in STRATS:
-            hs = _run(tasks, strat, rounds, seeds, participation=0.25)
-            out[f"K{K}_{strat.value}"] = {
+            hs = _run(names, strat, rounds, seeds, K,
+                      n_range=(60, 90) if fast else (200, 300),
+                      participation=0.25)
+            out[f"K{K}_{strat}"] = {
                 "min_acc": float(np.mean([h.min_acc[-1] for h in hs])),
                 "auc_min_acc": float(np.mean([h.min_acc.mean()
                                               for h in hs])),
@@ -90,36 +116,30 @@ def exp3_client_count(fast=True, seeds=(0, 1)):
     return out
 
 
-def _bids(rng, n):
-    """Experiment 4's bid model: task 1 truncated Gaussian, task 2
-    increasing-linear density on [0, 1]."""
-    b = np.empty((n, 2))
-    b[:, 0] = np.clip(rng.normal(0.5, 0.2, n), 0.01, 1.0)
-    b[:, 1] = np.sqrt(rng.random(n))
-    return b
-
-
 def exp4_auctions(fast=True, seeds=(0, 1, 2, 3, 4)):
-    """Fig. 5a/b: take-up difference + minimum take-up vs budget."""
+    """Fig. 5a/b: take-up difference + minimum take-up vs budget.
+
+    Pure mechanism comparison — every auction resolved from the AUCTIONS
+    registry under the uniform (bids, budget, rng, **options) signature."""
     n = 100
     budgets = [10, 29, 50] if fast else [5, 10, 20, 29, 40, 60, 80]
+    mechs = {
+        "maxmin_fair": ("maxmin_fair", {}),
+        "budget_fair": ("budget_fair", {}),
+        "gmmfair_NT": ("gmmfair", {}),
+        "greedy_within_budget_NT": ("greedy_within_budget", {}),
+        "random_within_budget_NT": ("random_within_budget", {}),
+        "valThreshold0.4_NB": ("val_threshold", {"threshold": 0.4}),
+        "valThreshold0.6_NB": ("val_threshold", {"threshold": 0.6}),
+    }
     out = {}
     for B in budgets:
         agg = {}
         for seed in seeds:
             rng = np.random.default_rng(seed)
             bids = _bids(rng, n)
-            mechs = {
-                "maxmin_fair": maxmin_fair_auction(bids, B),
-                "budget_fair": budget_fair_auction(bids, B),
-                "gmmfair_NT": gmmfair(bids, B),
-                "greedy_within_budget_NT": greedy_within_budget(bids, B),
-                "random_within_budget_NT": random_within_budget(rng, bids,
-                                                                B),
-                "valThreshold0.4_NB": val_threshold(bids, 0.4),
-                "valThreshold0.6_NB": val_threshold(bids, 0.6),
-            }
-            for name, res in mechs.items():
+            for name, (key, opts) in mechs.items():
+                res = AUCTIONS.get(key)(bids, B, rng=rng, **opts)
                 a = agg.setdefault(name, {"diff": [], "min": []})
                 a["diff"].append(res.diff_take_up)
                 a["min"].append(res.min_take_up)
@@ -131,34 +151,39 @@ def exp4_auctions(fast=True, seeds=(0, 1, 2, 3, 4)):
     return out
 
 
+def _bids(rng, n):
+    """Experiment 4's bid model (task 1 truncated Gaussian, task 2
+    increasing-linear density on [0, 1]) — the API's registered 'exp4'
+    model, so exp4 and exp5's AuctionSpec(bid_model='exp4') can never
+    diverge."""
+    from repro.api.engine import BID_MODELS
+
+    return BID_MODELS["exp4"](rng, n, 2)
+
+
 def exp5_auction_learning(fast=True, seeds=(0, 1)):
     """Fig. 5c: constrained budget B=29 — auction outcome feeds
-    FedFairMMFL; min accuracy across the two tasks."""
+    FedFairMMFL via an AuctionSpec; min accuracy across the two tasks."""
     K, B = 40, 29.0
     rounds = 20 if fast else 100
-    rng = np.random.default_rng(0)
-    bids = _bids(rng, K)
-    tasks = standard_tasks(["synth-mnist", "synth-cifar"], n_clients=K,
-                           seed=0, n_range=(60, 90))
-    mechs = {
-        "maxmin_fair": maxmin_fair_auction(bids, B),
-        "budget_fair": budget_fair_auction(bids, B),
-        "gmmfair_NT": gmmfair(bids, B),
-    }
+    names = ["synth-mnist", "synth-cifar"]
     out = {}
-    for name, res in mechs.items():
-        elig = np.zeros((K, 2), bool)
-        for s in range(2):
-            for u in res.winners[s]:
-                elig[u, s] = True
-        mins = []
+    for label, mech in (("maxmin_fair", "maxmin_fair"),
+                        ("budget_fair", "budget_fair"),
+                        ("gmmfair_NT", "gmmfair")):
+        auction = AuctionSpec(mechanism=mech, budget=B, bid_model="exp4",
+                              bid_seed=0)
+        mins, takes = [], []
         for seed in seeds:
-            cfg = TrainConfig(rounds=rounds, participation=0.6, tau=3,
-                              seed=seed)
-            h = MMFLTrainer(tasks, cfg, eligibility=elig).run()
-            mins.append(h.min_acc[-1])
-        out[name] = {"min_acc": float(np.mean(mins)),
-                     "min_take_up": res.min_take_up}
+            r = run_scenario(_scenario(names, "fedfair", rounds, seed,
+                                       n_range=(60, 90), n_clients=K,
+                                       participation=0.6,
+                                       auction=auction))
+            mins.append(r.min_acc[-1])
+            takes.append(r.auction["min_take_up"])
+        # the auction outcome is seed-independent (fixed bid_seed)
+        out[label] = {"min_acc": float(np.mean(mins)),
+                      "min_take_up": takes[0]}
     return out
 
 
@@ -168,17 +193,16 @@ def exp6_alpha_sweep(fast=True, seeds=(0, 1)):
     (Cor. 5's knob made empirical)."""
     n_clients = 30 if fast else 120
     rounds = 20 if fast else 100
-    tasks = standard_tasks(["synth-mnist", "synth-fmnist"],
-                           n_clients=n_clients, seed=0,
-                           n_range=(80, 120) if fast else (150, 250))
+    names = ["synth-mnist", "synth-fmnist"]
+    n_range = (80, 120) if fast else (150, 250)
     out = {}
     for alpha in (1.0, 2.0, 3.0, 5.0, 10.0):
         mins, means, worst_share = [], [], []
         for seed in seeds:
-            cfg = TrainConfig(rounds=rounds, alpha=alpha,
-                              strategy=AllocationStrategy.FEDFAIR,
-                              participation=0.25, tau=3, seed=seed)
-            h = MMFLTrainer(tasks, cfg).run()
+            h = run_scenario(_scenario(names, "fedfair", rounds, seed,
+                                       n_range=n_range,
+                                       n_clients=n_clients,
+                                       participation=0.25, alpha=alpha))
             mins.append(h.min_acc[-1])
             means.append(h.acc[-1].mean())
             tot = h.alloc_counts.sum(axis=0)
@@ -197,24 +221,44 @@ def exp7_stragglers(fast=True, seeds=(0, 1)):
     aggregation. Does FedFairMMFL's advantage survive stragglers?"""
     n_clients = 40 if fast else 120
     rounds = 25 if fast else 100
-    tasks = standard_tasks(["synth-mnist", "synth-cifar", "synth-fmnist"],
-                           n_clients=n_clients, seed=0)
+    names = ["synth-mnist", "synth-cifar", "synth-fmnist"]
     out = {}
     for p in (0.0, 0.3, 0.6):
-        for strat in (AllocationStrategy.FEDFAIR,
-                      AllocationStrategy.RANDOM):
+        for strat in ("fedfair", "random"):
             mins, variances = [], []
             for seed in seeds:
-                cfg = TrainConfig(rounds=rounds, strategy=strat,
-                                  participation=0.2, tau=3, seed=seed,
-                                  dropout_prob=p)
-                h = MMFLTrainer(tasks, cfg).run()
+                h = run_scenario(_scenario(names, strat, rounds, seed,
+                                           n_clients=n_clients,
+                                           participation=0.2,
+                                           dropout_prob=p))
                 mins.append(h.min_acc[-1])
                 variances.append(h.var_acc[-1])
-            out[f"p{p}_{strat.value}"] = {
+            out[f"p{p}_{strat}"] = {
                 "min_acc": float(np.mean(mins)),
                 "var_acc": float(np.mean(variances)),
             }
+    return out
+
+
+def exp8_tau_sweep(fast=True, seeds=(0, 1)):
+    """Extension: local-epoch count tau vs fairness. More local steps speed
+    convergence per round but amplify client drift on non-iid data — does
+    FedFairMMFL's min-acc advantage persist across tau?"""
+    n_clients = 40 if fast else 120
+    rounds = 20 if fast else 80
+    names = ["synth-mnist", "synth-fmnist"]
+    out = {}
+    for tau in (1, 3, 10):
+        for strat in ("fedfair", "random"):
+            mins = []
+            for seed in seeds:
+                h = run_scenario(_scenario(names, strat, rounds, seed,
+                                           n_range=(80, 120),
+                                           n_clients=n_clients,
+                                           participation=0.25, tau=tau))
+                mins.append(h.min_acc[-1])
+            out[f"tau{tau}_{strat}"] = {
+                "min_acc": float(np.mean(mins))}
     return out
 
 
@@ -232,10 +276,11 @@ def exp9_async_vs_sync(fast=True, seeds=(0, 1), target=0.55,
                        json_path="BENCH_async.json"):
     """Async-engine headline: sync lockstep rounds vs the FedAST-style
     staleness-aware async engine under heterogeneous (bimodal) client
-    speeds, matched on TOTAL client updates. Sync pays the straggler
-    barrier (each round costs the slowest participant); async pays only
-    per-client durations. Reports virtual time-to-min-accuracy and the
-    fairness spread (variance across task accuracies), and writes
+    speeds, matched on TOTAL client updates — both driven through
+    run_scenario, differing ONLY in RuntimeSpec.mode. Sync pays the
+    straggler barrier (each round costs the slowest participant); async
+    pays only per-client durations. Reports virtual time-to-min-accuracy
+    and the fairness spread (variance across task accuracies), and writes
     BENCH_async.json for the CI artifact trail."""
     K = 20
     rounds = 15 if fast else 60
@@ -244,18 +289,16 @@ def exp9_async_vs_sync(fast=True, seeds=(0, 1), target=0.55,
     tau = 3
     m = max(1, int(round(participation * K)))
     arrivals = rounds * m                  # matched update budget
-    tasks = standard_tasks(["synth-mnist", "synth-fmnist"], n_clients=K,
-                           seed=0, n_range=(60, 90))
+    names = ["synth-mnist", "synth-fmnist"]
     agg = {k: {"t2a": [], "min_acc": [], "var_acc": [], "vtime": []}
            for k in ("sync_fedfair", "async_fedfair", "async_random")}
     for seed in seeds:
         speeds = client_speeds(profile, K,
                                np.random.default_rng(seed + 1),
                                spread=spread)
-        cfg = TrainConfig(rounds=rounds, participation=participation,
-                          tau=tau, seed=seed,
-                          strategy=AllocationStrategy.FEDFAIR)
-        h = MMFLTrainer(tasks, cfg).run()
+        h = run_scenario(_scenario(names, "fedfair", rounds, seed,
+                                   n_range=(60, 90), n_clients=K,
+                                   participation=participation, tau=tau))
         # lockstep round duration = the slowest participating client
         round_t = np.array([
             (1.0 / speeds[row >= 0]).max() if (row >= 0).any() else 0.0
@@ -266,18 +309,19 @@ def exp9_async_vs_sync(fast=True, seeds=(0, 1), target=0.55,
         agg["sync_fedfair"]["min_acc"].append(h.min_acc[-1])
         agg["sync_fedfair"]["var_acc"].append(h.var_acc[-1])
         agg["sync_fedfair"]["vtime"].append(float(t[-1]))
-        for name, strat in (("async_fedfair", AllocationStrategy.FEDFAIR),
-                            ("async_random", AllocationStrategy.RANDOM)):
-            acfg = AsyncConfig(total_arrivals=arrivals, buffer_size=5,
-                               beta=0.5, tau=tau, seed=seed,
-                               strategy=strat, speed_profile=profile,
-                               speed_spread=spread)
-            ha = AsyncMMFLEngine.from_fed_tasks(tasks, acfg).run()
+        for name, strat in (("async_fedfair", "fedfair"),
+                            ("async_random", "random")):
+            ha = run_scenario(_scenario(
+                names, strat, rounds, seed, n_range=(60, 90),
+                n_clients=K, tau=tau, mode="async",
+                total_arrivals=arrivals, buffer_size=5, beta=0.5,
+                clients_kw={"speed_profile": profile,
+                            "speed_spread": spread}))
             agg[name]["t2a"].append(_time_to_target(ha.time, ha.min_acc,
                                                     target))
             agg[name]["min_acc"].append(ha.min_acc[-1])
             agg[name]["var_acc"].append(ha.var_acc[-1])
-            agg[name]["vtime"].append(float(ha.time[-1]))
+            agg[name]["vtime"].append(ha.virtual_time)
 
     def _mean(vals):
         vals = [v for v in vals if v is not None]
@@ -291,28 +335,4 @@ def exp9_async_vs_sync(fast=True, seeds=(0, 1), target=0.55,
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
-    return out
-
-
-def exp8_tau_sweep(fast=True, seeds=(0, 1)):
-    """Extension: local-epoch count tau vs fairness. More local steps speed
-    convergence per round but amplify client drift on non-iid data — does
-    FedFairMMFL's min-acc advantage persist across tau?"""
-    n_clients = 40 if fast else 120
-    rounds = 20 if fast else 80
-    tasks = standard_tasks(["synth-mnist", "synth-fmnist"],
-                           n_clients=n_clients, seed=0,
-                           n_range=(80, 120))
-    out = {}
-    for tau in (1, 3, 10):
-        for strat in (AllocationStrategy.FEDFAIR,
-                      AllocationStrategy.RANDOM):
-            mins = []
-            for seed in seeds:
-                cfg = TrainConfig(rounds=rounds, strategy=strat,
-                                  participation=0.25, tau=tau, seed=seed)
-                h = MMFLTrainer(tasks, cfg).run()
-                mins.append(h.min_acc[-1])
-            out[f"tau{tau}_{strat.value}"] = {
-                "min_acc": float(np.mean(mins))}
     return out

@@ -46,36 +46,60 @@ def kernel_micro():
     return rows
 
 
+def experiment_specs():
+    from benchmarks import experiments as E
+
+    return [
+        ("exp1_difficulty_fig2", E.exp1_difficulty),
+        ("exp2_task_count_fig3", E.exp2_task_count),
+        ("exp3_client_count_fig4", E.exp3_client_count),
+        ("exp4_auctions_fig5ab", E.exp4_auctions),
+        ("exp5_auction_learning_fig5c", E.exp5_auction_learning),
+        ("exp6_alpha_sweep_techreport", E.exp6_alpha_sweep),
+        ("exp7_stragglers_extension", E.exp7_stragglers),
+        ("exp8_tau_sweep_extension", E.exp8_tau_sweep),
+        ("exp9_async_vs_sync_fedast", E.exp9_async_vs_sync),
+    ]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-sized experiment runs (slow)")
     ap.add_argument("--skip-experiments", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="print experiment names and exit")
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help="run a single experiment (full name or unique "
+                         "prefix, e.g. 'exp4')")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: async-vs-sync experiment + kernel "
-                         "microbench only (few rounds, tiny configs)")
+                         "microbench only (alias for --only exp9)")
     ap.add_argument("--json-out", default=None,
                     help="also write the rows as JSON (CI artifact)")
     args = ap.parse_args()
     fast = not args.full
     rows = []
 
-    from benchmarks import experiments as E
+    if args.list:
+        for name, _ in experiment_specs():
+            print(name)
+        return
 
     if not args.skip_experiments:
-        specs = [
-            ("exp1_difficulty_fig2", E.exp1_difficulty),
-            ("exp2_task_count_fig3", E.exp2_task_count),
-            ("exp3_client_count_fig4", E.exp3_client_count),
-            ("exp4_auctions_fig5ab", E.exp4_auctions),
-            ("exp5_auction_learning_fig5c", E.exp5_auction_learning),
-            ("exp6_alpha_sweep_techreport", E.exp6_alpha_sweep),
-            ("exp7_stragglers_extension", E.exp7_stragglers),
-            ("exp8_tau_sweep_extension", E.exp8_tau_sweep),
-            ("exp9_async_vs_sync_fedast", E.exp9_async_vs_sync),
-        ]
-        if args.smoke:
-            specs = [("exp9_async_vs_sync_fedast", E.exp9_async_vs_sync)]
+        specs = experiment_specs()
+        only = args.only or ("exp9" if args.smoke else None)
+        if only:
+            exact = [(n, f) for n, f in specs if n == only]
+            matched = exact or [(n, f) for n, f in specs
+                                if n.startswith(only)]
+            if not matched:
+                sys.exit(f"--only {only!r} matches no experiment; "
+                         "see --list")
+            if len(matched) > 1:
+                sys.exit(f"--only {only!r} is ambiguous: "
+                         + ", ".join(n for n, _ in matched))
+            specs = matched
         for name, fn in specs:
             t0 = time.perf_counter()
             result = fn(fast=fast)

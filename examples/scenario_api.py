@@ -1,0 +1,99 @@
+"""Scenario API tour: JSON-driven runs, registry extension, sync vs async.
+
+One declarative ``ScenarioSpec`` is the entry point for every MMFL run —
+the same spec drives the sync lockstep trainer and the async FedAST-style
+engine (flip ``runtime.mode``), and every axis (allocator, auction,
+arrival process, task family) is a registry key, so a new behaviour is a
+decorated class, not a driver fork. Shown here:
+
+  1. run a spec loaded from JSON (the CI smoke uses the same file via
+     ``python -m repro.launch.train --spec ...``);
+  2. build a spec in code and run it sync AND async;
+  3. register a custom arrival process ("lunch_break") and use it by name.
+
+    PYTHONPATH=src python examples/scenario_api.py
+"""
+import argparse
+
+import numpy as np
+
+from repro.api import (
+    ArrivalProcess,
+    ClientPopulationSpec,
+    RuntimeSpec,
+    ScenarioSpec,
+    TaskSpec,
+    register_arrival_process,
+    run_scenario,
+)
+
+
+@register_arrival_process("lunch_break")
+class LunchBreak(ArrivalProcess):
+    """Every client goes offline for ``length`` virtual-time units once
+    per ``every`` units (a caricature of diurnal availability)."""
+
+    def __init__(self, every: float = 10.0, length: float = 3.0):
+        self.every = every
+        self.length = length
+
+    def next_start(self, client, t):
+        pos = t % self.every
+        work_window = self.every - self.length
+        return t if pos < work_window else t + (self.every - pos)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arrivals", type=int, default=120)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=8)
+    args = ap.parse_args()
+
+    # 1. a spec is data: JSON in, JSON out
+    spec = ScenarioSpec(
+        name="scenario-api-demo",
+        tasks=[
+            TaskSpec("synth-mnist", options={"n_range": [60, 90]}),
+            TaskSpec("synth-fmnist", options={"n_range": [60, 90]}),
+        ],
+        clients=ClientPopulationSpec(n_clients=args.clients, participation=0.5),
+        runtime=RuntimeSpec(mode="sync", rounds=args.rounds, tau=3),
+    )
+    assert ScenarioSpec.from_json(spec.to_json()) == spec
+    print("spec JSON round-trips; sync run:")
+    sync = run_scenario(spec)
+    print(
+        f"  min_acc={sync.fairness['min_acc']:.3f} "
+        f"var_acc={sync.fairness['var_acc']:.4f} "
+        f"arrivals={sync.arrivals.tolist()}"
+    )
+
+    # 2. the SAME spec, async: flip the runtime mode — no caller branching
+    spec.name = "scenario-api-demo-async"
+    spec.runtime.mode = "async"
+    spec.runtime.total_arrivals = args.arrivals
+    spec.runtime.buffer_size = 4
+    spec.clients.speed_profile = "bimodal"
+    anc = run_scenario(spec)
+    print(
+        f"async run: min_acc={anc.fairness['min_acc']:.3f} "
+        f"virtual_time={anc.virtual_time:.1f} "
+        f"mean_staleness={np.mean(anc.staleness_mean):.2f}"
+    )
+
+    # 3. custom availability by registry key: clients take lunch breaks
+    spec.name = "scenario-api-demo-lunch"
+    spec.clients.arrival_process = "lunch_break"
+    spec.clients.arrival_options = {"every": 10.0, "length": 3.0}
+    lunch = run_scenario(spec)
+    print(
+        f"lunch_break run: min_acc={lunch.fairness['min_acc']:.3f} "
+        f"virtual_time={lunch.virtual_time:.1f} "
+        f"(vs {anc.virtual_time:.1f} always-on — availability gaps "
+        f"stretch the clock)"
+    )
+
+
+if __name__ == "__main__":
+    main()

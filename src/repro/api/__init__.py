@@ -1,0 +1,72 @@
+"""Unified scenario API: declarative specs, registries, one entry point.
+
+    from repro.api import ScenarioSpec, TaskSpec, run_scenario
+
+    spec = ScenarioSpec(tasks=[TaskSpec("synth-mnist"),
+                               TaskSpec("synth-fmnist")])
+    result = run_scenario(spec)
+
+``run_scenario`` drives both the sync round loop and the async
+FedAST-style engine behind the same ``Engine`` protocol; extension points
+are string-keyed registries (``@register_allocator``,
+``@register_arrival_process``, ``@register_auction``,
+``@register_task_family``).
+"""
+
+from __future__ import annotations
+
+from repro.api.registry import (  # noqa: F401
+    ALLOCATORS,
+    ARRIVAL_PROCESSES,
+    AUCTIONS,
+    Registry,
+    register_allocator,
+    register_arrival_process,
+    register_auction,
+    register_task_family,
+)
+from repro.api.arrivals import (  # noqa: F401
+    AlwaysOn,
+    ArrivalProcess,
+    Bursty,
+    PoissonParticipation,
+    get_arrival_process,
+)
+from repro.api.spec import (  # noqa: F401
+    AllocationSpec,
+    AuctionSpec,
+    ClientPopulationSpec,
+    RuntimeSpec,
+    ScenarioSpec,
+    TaskSpec,
+)
+
+# built-in allocator / auction registrations live next to their
+# implementations; importing them here populates the registries
+import repro.core.allocation  # noqa: E402,F401  (registers allocators)
+import repro.core.auctions  # noqa: E402,F401  (registers auctions)
+
+_ENGINE_EXPORTS = (
+    "Engine",
+    "RunResult",
+    "run_scenario",
+    "build_eligibility",
+    # the registry itself lives in repro.api.registry, but its built-in
+    # entries are registered by engine.py — route access through the lazy
+    # engine import so the families are always populated when looked up
+    "TASK_FAMILIES",
+)
+
+
+def __getattr__(name: str):
+    # engine pulls in repro.fed (jax-heavy, and repro.fed imports this
+    # package for arrival processes) — load it lazily to break the cycle
+    if name in _ENGINE_EXPORTS:
+        from repro.api import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_ENGINE_EXPORTS))

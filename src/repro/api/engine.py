@@ -1,0 +1,554 @@
+"""`run_scenario`: one entry point for every MMFL run.
+
+A ``ScenarioSpec`` resolves — through the registries — to a task family
+(synthetic FedTask MLPs or production LM architectures), an optional
+recruitment auction producing the eligibility matrix, and a runtime
+(sync lockstep rounds or the async FedAST-style event engine). Both
+runtimes sit behind the same ``Engine`` protocol and return the same
+``RunResult``, so callers (CLI, benchmarks, sweeps) never branch on mode.
+
+    result = run_scenario(ScenarioSpec(tasks=[TaskSpec("synth-mnist")]))
+    result.fairness["min_acc"], result.to_json()
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol
+
+import numpy as np
+
+from repro.api.registry import (
+    ALLOCATORS,
+    ARRIVAL_PROCESSES,
+    AUCTIONS,
+    TASK_FAMILIES,
+    register_task_family,
+)
+from repro.api.spec import AuctionSpec, ScenarioSpec
+from repro.core.fairness import fairness_report
+from repro.fed.async_engine import AsyncConfig, AsyncMMFLEngine, FedAsyncTask
+from repro.fed.data import _RECIPES, make_synthetic_task, task_seed
+from repro.fed.trainer import MMFLTrainer, TrainConfig
+
+
+# ----------------------------------------------------------------- result
+
+
+@dataclass
+class RunResult:
+    """What every scenario run returns, sync or async.
+
+    ``loss`` is the per-eval prevailing f_s curve (1 - accuracy for
+    synthetic tasks, eval loss for arch tasks); ``acc`` is present only
+    when the family defines accuracy. ``time`` is virtual flush time for
+    async runs (sync rounds have no time model — derive one from the
+    ``alloc`` trace as exp9 does).
+    """
+
+    scenario: str
+    mode: str
+    task_names: List[str]
+    loss: np.ndarray  # (T, S)
+    acc: Optional[np.ndarray]  # (T, S) or None
+    arrivals: np.ndarray  # (S,) total client updates per task
+    alloc_counts: Optional[np.ndarray] = None  # (T, S) sync per-round
+    time: Optional[np.ndarray] = None  # (T,) async virtual times
+    virtual_time: float = 0.0
+    wall_time: float = 0.0
+    fairness: Dict[str, Any] = field(default_factory=dict)
+    spec: Optional[ScenarioSpec] = None
+    # traces / diagnostics
+    alloc: Optional[np.ndarray] = None  # sync (T, K) assignment trace
+    assignments: Optional[List] = None  # async (client, task) dispatch log
+    staleness_mean: Optional[np.ndarray] = None
+    versions: Optional[np.ndarray] = None
+    dropped: int = 0
+    auction: Optional[Dict[str, Any]] = None
+    params: Optional[List] = None  # final per-task model pytrees
+
+    def __post_init__(self):
+        if not self.fairness:
+            self.fairness = self._fairness()
+
+    def _fairness(self) -> Dict[str, Any]:
+        if self.acc is not None and len(self.acc):
+            rep = fairness_report(self.acc[-1])
+            rep["worst_task"] = self.task_names[int(np.argmin(self.acc[-1]))]
+            return rep
+        if len(self.loss) == 0:
+            return {}
+        last = np.asarray(self.loss[-1], np.float64)
+        return {
+            "min_loss": float(last.min()),
+            "max_loss": float(last.max()),
+            "mean_loss": float(last.mean()),
+            "var_loss": float(last.var()),
+            "worst_task": self.task_names[int(np.argmax(last))],
+        }
+
+    @property
+    def min_acc(self) -> np.ndarray:
+        if self.acc is None:
+            raise ValueError("this task family does not define accuracy")
+        return self.acc.min(axis=1)
+
+    @property
+    def var_acc(self) -> np.ndarray:
+        if self.acc is None:
+            raise ValueError("this task family does not define accuracy")
+        return self.acc.var(axis=1)
+
+    @property
+    def final_loss(self) -> Dict[str, float]:
+        if len(self.loss) == 0:
+            return {}
+        return {n: float(v) for n, v in zip(self.task_names, self.loss[-1])}
+
+    def to_json(self) -> Dict[str, Any]:
+        """JSON-native summary (curves + fairness), used by benchmarks."""
+
+        def arr(a):
+            return None if a is None else np.asarray(a).tolist()
+
+        out = {
+            "scenario": self.scenario,
+            "mode": self.mode,
+            "task_names": list(self.task_names),
+            "loss": arr(self.loss),
+            "acc": arr(self.acc),
+            "time": arr(self.time),
+            "arrivals": arr(self.arrivals),
+            "alloc_counts": arr(self.alloc_counts),
+            "virtual_time": float(self.virtual_time),
+            "wall_time": float(self.wall_time),
+            "dropped": int(self.dropped),
+            "versions": arr(self.versions),
+            "fairness": self.fairness,
+            "final_loss": self.final_loss,
+        }
+        if self.auction is not None:
+            out["auction"] = self.auction
+        if self.spec is not None:
+            out["spec"] = self.spec.to_dict()
+        return out
+
+
+class Engine(Protocol):
+    """What both runtimes look like to a caller: build from a spec, run,
+    get a RunResult. No mode branching on the caller side."""
+
+    def run(self, verbose: bool = False) -> RunResult: ...
+
+
+# ----------------------------------------------------------------- auction
+
+BID_MODELS = {
+    # bids ~ U(0, 1) iid per (user, task)
+    "uniform": lambda rng, n, S: rng.random((n, S)),
+}
+
+
+def _bids_exp4(rng, n, S):
+    """Experiment 4's bid model: task 1 truncated Gaussian, task 2
+    increasing-linear density on [0, 1] (2 tasks only)."""
+    if S != 2:
+        raise ValueError(f"bid model 'exp4' is defined for 2 tasks, got {S}")
+    b = np.empty((n, 2))
+    b[:, 0] = np.clip(rng.normal(0.5, 0.2, n), 0.01, 1.0)
+    b[:, 1] = np.sqrt(rng.random(n))
+    return b
+
+
+BID_MODELS["exp4"] = _bids_exp4
+
+
+def build_eligibility(auction: AuctionSpec, n_clients: int, n_tasks: int):
+    """Run the named auction; returns (eligibility (K, S) bool, result)."""
+    if auction.bids is not None:
+        bids = np.asarray(auction.bids, np.float64)
+        if bids.shape != (n_clients, n_tasks):
+            raise ValueError(f"explicit bids shape {bids.shape} != ({n_clients}, {n_tasks})")
+    else:
+        try:
+            model = BID_MODELS[auction.bid_model]
+        except KeyError:
+            known = ", ".join(sorted(BID_MODELS))
+            raise KeyError(f"unknown bid model {auction.bid_model!r}; known: {known}") from None
+        bids = model(np.random.default_rng(auction.bid_seed), n_clients, n_tasks)
+    mech = AUCTIONS.get(auction.mechanism)
+    res = mech(
+        bids,
+        auction.budget,
+        rng=np.random.default_rng(auction.bid_seed + 1),
+        **auction.options,
+    )
+    elig = np.zeros((n_clients, n_tasks), bool)
+    for s, ws in enumerate(res.winners):
+        for u in ws:
+            elig[u, s] = True
+    return elig, res
+
+
+# ------------------------------------------------------------- spec -> cfg
+
+
+def _train_config(spec: ScenarioSpec) -> TrainConfig:
+    rt, pop, al = spec.runtime, spec.clients, spec.allocation
+    return TrainConfig(
+        rounds=rt.rounds,
+        alpha=al.alpha,
+        participation=pop.participation,
+        tau=rt.tau,
+        lr=rt.lr,
+        batch_size=rt.batch_size,
+        hidden=rt.hidden,
+        depth=rt.depth,
+        strategy=ALLOCATORS.get(al.strategy),
+        seed=spec.seed,
+        eval_every=rt.eval_every,
+        dropout_prob=pop.dropout_prob,
+        deep_for=tuple(rt.deep_for),
+        deep_depth=rt.deep_depth,
+    )
+
+
+def _async_config(spec: ScenarioSpec) -> AsyncConfig:
+    rt, pop, al = spec.runtime, spec.clients, spec.allocation
+    return AsyncConfig(
+        total_arrivals=rt.total_arrivals,
+        buffer_size=rt.buffer_size,
+        beta=rt.beta,
+        server_lr=rt.server_lr,
+        alpha=al.alpha,
+        strategy=ALLOCATORS.get(al.strategy),
+        speed_profile=pop.speed_profile,
+        speed_spread=pop.speed_spread,
+        slow_fraction=pop.slow_fraction,
+        arrival_process=pop.arrival_process,
+        arrival_options=dict(pop.arrival_options),
+        max_staleness=rt.max_staleness,
+        tau=rt.tau,
+        lr=rt.lr,
+        batch_size=rt.batch_size,
+        hidden=rt.hidden,
+        depth=rt.depth,
+        deep_for=tuple(rt.deep_for),
+        deep_depth=rt.deep_depth,
+        seed=spec.seed,
+    )
+
+
+# ------------------------------------------------------------ sync engine
+
+
+class SyncFedEngine:
+    """The sync lockstep round loop (``MMFLTrainer``) behind the Engine
+    protocol — identical configs produce identical Histories."""
+
+    def __init__(self, spec: ScenarioSpec, tasks, eligibility=None):
+        self.spec = spec
+        self.trainer = MMFLTrainer(tasks, _train_config(spec), eligibility=eligibility)
+
+    def run(self, verbose: bool = False) -> RunResult:
+        h = self.trainer.run(verbose=verbose)
+        return RunResult(
+            scenario=self.spec.name,
+            mode="sync",
+            task_names=[t.name for t in self.trainer.tasks],
+            loss=np.maximum(1.0 - h.acc, 1e-6),
+            acc=h.acc,
+            arrivals=h.alloc_counts.sum(axis=0),
+            alloc_counts=h.alloc_counts,
+            alloc=h.alloc,
+            spec=self.spec,
+            params=self.trainer.params,
+        )
+
+
+class AsyncEngineRunner:
+    """The async FedAST-style engine behind the Engine protocol."""
+
+    def __init__(self, spec: ScenarioSpec, engine: AsyncMMFLEngine, has_acc: bool):
+        self.spec = spec
+        self.engine = engine
+        self.has_acc = has_acc
+
+    def run(self, verbose: bool = False) -> RunResult:
+        h = self.engine.run(verbose=verbose)
+        return RunResult(
+            scenario=self.spec.name,
+            mode="async",
+            task_names=[t.name for t in self.engine.tasks],
+            loss=h.metric,
+            acc=h.acc if self.has_acc else None,
+            arrivals=h.arrivals,
+            time=h.time,
+            virtual_time=float(h.time[-1]) if len(h.time) else 0.0,
+            staleness_mean=h.staleness_mean,
+            versions=h.versions,
+            dropped=h.dropped,
+            assignments=h.assignments,
+            spec=self.spec,
+            params=self.engine._params,
+        )
+
+
+# ------------------------------------------------------------ task families
+
+
+@register_task_family("synthetic")
+class SyntheticFamily:
+    """Class-conditional Gaussian FedTasks (``fed.data``). TaskSpec
+    options: any ``make_synthetic_task`` kwarg (``n_range``, ``non_iid``,
+    recipe overrides). Seeding matches ``standard_tasks`` exactly."""
+
+    def build_tasks(self, spec: ScenarioSpec):
+        tasks = []
+        for i, ts in enumerate(spec.tasks):
+            base = ts.name.split("#")[0]
+            if base not in _RECIPES:
+                recipes = ", ".join(sorted(_RECIPES))
+                raise KeyError(f"unknown synthetic task {ts.name!r}; recipes: {recipes}")
+            kw = dict(_RECIPES[base])
+            kw.update(ts.options)
+            if "n_range" in kw:
+                kw["n_range"] = tuple(kw["n_range"])
+            tasks.append(
+                make_synthetic_task(
+                    task_seed(spec.data_seed, i),
+                    ts.name,
+                    spec.clients.n_clients,
+                    **kw,
+                )
+            )
+        return tasks
+
+    def sync_engine(self, spec: ScenarioSpec, eligibility=None) -> Engine:
+        return SyncFedEngine(spec, self.build_tasks(spec), eligibility)
+
+    def async_engine(self, spec: ScenarioSpec, eligibility=None) -> Engine:
+        acfg = _async_config(spec)
+        adapters = [FedAsyncTask(t, s, acfg) for s, t in enumerate(self.build_tasks(spec))]
+        for a, ts in zip(adapters, spec.tasks):
+            a.work = ts.work
+        return AsyncEngineRunner(spec, AsyncMMFLEngine(adapters, acfg, eligibility), has_acc=True)
+
+
+@register_task_family("arch")
+class ArchFamily:
+    """Production LM architectures (``launch.train``): per-arch sharded
+    train steps on synthetic non-iid token shards. TaskSpec options:
+    ``preset``, ``seq``, ``batch``, ``tau``, ``local_lr``, ``shards``."""
+
+    def build_tasks(self, spec: ScenarioSpec):
+        # lazy import: launch.train imports this package for its CLI
+        from repro.launch.train import build_task, make_dataset
+
+        tasks, data = {}, {}
+        for i, ts in enumerate(spec.tasks):
+            o = ts.options
+            seq = o.get("seq", 64)
+            tasks[ts.name] = build_task(
+                ts.name,
+                o.get("preset", "tiny"),
+                seq,
+                o.get("batch", 8),
+                tau=o.get("tau", 1),
+                local_lr=o.get("local_lr", 5e-3),
+            )
+            data[ts.name] = make_dataset(
+                None,
+                tasks[ts.name]["cfg"],
+                spec.clients.n_clients,
+                o.get("shards", 4),
+                seq,
+                seed=spec.data_seed + i,
+            )
+        return tasks, data
+
+    def sync_engine(self, spec: ScenarioSpec, eligibility=None) -> Engine:
+        tasks, data = self.build_tasks(spec)
+        return ArchSyncEngine(spec, tasks, data, eligibility)
+
+    def async_engine(self, spec: ScenarioSpec, eligibility=None) -> Engine:
+        from repro.launch.train import ArchAsyncTask
+
+        tasks, data = self.build_tasks(spec)
+        adapters = []
+        for i, ts in enumerate(spec.tasks):
+            a = ArchAsyncTask(
+                ts.name,
+                i,
+                tasks[ts.name],
+                data[ts.name],
+                tau=max(ts.options.get("tau", 1), 1),
+                local_lr=ts.options.get("local_lr", 5e-3),
+            )
+            a.work = ts.work
+            adapters.append(a)
+        engine = AsyncMMFLEngine(adapters, _async_config(spec), eligibility)
+        return AsyncEngineRunner(spec, engine, has_acc=False)
+
+
+class ArchSyncEngine:
+    """The production sync round loop (formerly inlined in
+    ``launch/train.py``): MMFLCoordinator allocation -> per-arch train
+    step -> loss report, with full-state checkpoint/resume (params, opt,
+    coordinator round/RNG — so post-resume allocations match an
+    uninterrupted run)."""
+
+    def __init__(self, spec: ScenarioSpec, tasks, data, eligibility=None):
+        from repro.core.mmfl import MMFLCoordinator
+
+        self.spec = spec
+        self.tasks = tasks
+        self.data = data
+        self.names = [t.name for t in spec.tasks]
+        self.coord = MMFLCoordinator(
+            task_names=self.names,
+            n_clients=spec.clients.n_clients,
+            alpha=spec.allocation.alpha,
+            strategy=ALLOCATORS.get(spec.allocation.strategy),
+            participation=spec.clients.participation,
+            seed=spec.seed,
+            eligibility=eligibility,
+        )
+
+    def run(self, verbose: bool = False) -> RunResult:
+        from repro.launch.train import assemble_batch
+
+        spec, rt = self.spec, self.spec.runtime
+        rng = np.random.default_rng(spec.seed)
+        loss_hist, count_hist, alloc_hist = [], [], []
+
+        ckpt, start_round = None, 0
+        if rt.checkpoint_dir:
+            from repro.checkpoint import CheckpointManager
+
+            ckpt = CheckpointManager(rt.checkpoint_dir)
+            if rt.resume and ckpt.latest_step() is not None:
+                step, saved, coord_state = ckpt.restore()
+                import jax
+                import jax.numpy as jnp
+
+                for a in self.names:
+                    if a in saved:
+                        self.tasks[a]["params"] = jax.tree.map(jnp.asarray, saved[a]["params"])
+                        self.tasks[a]["opt"] = jax.tree.map(jnp.asarray, saved[a]["opt"])
+                if "coordinator" in coord_state:
+                    self.coord.load_state(coord_state["coordinator"])
+                    rng.bit_generator.state = coord_state["data_rng"]
+                    # pre-checkpoint curves, so the RunResult covers the
+                    # WHOLE run, not just the post-resume tail
+                    hist = coord_state.get("history", {})
+                    loss_hist = [list(x) for x in hist.get("loss", [])]
+                    count_hist = [list(x) for x in hist.get("counts", [])]
+                    alloc_hist = [np.asarray(x, np.int64)
+                                  for x in hist.get("alloc", [])]
+                else:                      # legacy pre-PR2 payload
+                    self.coord.load_state(coord_state)
+                start_round = step
+                if verbose:
+                    print(f"resumed from round {step}")
+        for r in range(start_round, rt.rounds):
+            alloc = self.coord.next_round()
+            t0 = time.time()
+            line = []
+            row = np.full(spec.clients.n_clients, -1, np.int64)
+            for s, a in enumerate(self.names):
+                ids = alloc[a]
+                if len(ids) == 0:
+                    line.append(f"{a}: -")
+                    continue
+                row[ids] = s
+                t = self.tasks[a]
+                w = self.coord.client_weights(ids)
+                batch = assemble_batch(t, self.data[a], ids, w, rng)
+                loss, t["params"], t["opt"] = t["step"](t["params"], t["opt"], batch)
+                self.coord.report(a, float(loss))
+                line.append(f"{a}: {float(loss):.3f} ({len(ids)}c)")
+            loss_hist.append([self.coord.tasks[a].loss for a in self.names])
+            count_hist.append([len(alloc[a]) for a in self.names])
+            alloc_hist.append(row)
+            if verbose:
+                print(f"round {r + 1:3d} [{time.time() - t0:5.1f}s] " + " | ".join(line))
+            if ckpt and (r + 1) % rt.checkpoint_every == 0:
+                task_state = {}
+                for a in self.names:
+                    task_state[a] = {
+                        "params": self.tasks[a]["params"],
+                        "opt": self.tasks[a]["opt"],
+                    }
+                ckpt.save(
+                    r + 1,
+                    task_state,
+                    coordinator_state={
+                        "coordinator": self.coord.state_dict(),
+                        "data_rng": rng.bit_generator.state,
+                        "history": {
+                            "loss": [list(x) for x in loss_hist],
+                            "counts": [list(x) for x in count_hist],
+                            "alloc": [np.asarray(x).tolist() for x in alloc_hist],
+                        },
+                    },
+                )
+
+        counts = np.array(count_hist, np.int64).reshape(-1, len(self.names))
+        return RunResult(
+            scenario=spec.name,
+            mode="sync",
+            task_names=self.names,
+            loss=np.array(loss_hist),
+            acc=None,
+            arrivals=counts.sum(axis=0),
+            alloc_counts=counts,
+            alloc=np.array(alloc_hist),
+            spec=spec,
+            params=[self.tasks[a]["params"] for a in self.names],
+        )
+
+
+# ------------------------------------------------------------ entry point
+
+
+def run_scenario(spec: ScenarioSpec, verbose: bool = False) -> RunResult:
+    """Build and run the scenario described by ``spec``.
+
+    Resolves every registry key up front (so typos fail fast with the
+    valid names), runs the optional recruitment auction to produce the
+    eligibility matrix, then drives the sync or async runtime behind the
+    shared Engine protocol.
+    """
+    # snapshot: the RunResult's provenance record must not change if the
+    # caller mutates the spec after the run (e.g. to rerun in async mode)
+    spec = copy.deepcopy(spec)
+    family = TASK_FAMILIES.get(spec.family)()
+    ALLOCATORS.get(spec.allocation.strategy)
+    ARRIVAL_PROCESSES.get(spec.clients.arrival_process)
+    auction_summary = None
+    eligibility = None
+    if spec.auction is not None:
+        K, S = spec.clients.n_clients, len(spec.tasks)
+        eligibility, res = build_eligibility(spec.auction, K, S)
+        auction_summary = {
+            "mechanism": spec.auction.mechanism,
+            "budget": spec.auction.budget,
+            "take_up": res.take_up.tolist(),
+            "min_take_up": res.min_take_up,
+            "diff_take_up": res.diff_take_up,
+            "spent": float(res.spent),
+        }
+
+    if spec.runtime.mode == "sync":
+        engine = family.sync_engine(spec, eligibility)
+    else:
+        engine = family.async_engine(spec, eligibility)
+
+    t0 = time.time()
+    result = engine.run(verbose=verbose)
+    result.wall_time = time.time() - t0
+    result.auction = auction_summary
+    return result

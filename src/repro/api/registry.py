@@ -1,0 +1,70 @@
+"""String-keyed extension registries for the scenario API.
+
+Every pluggable axis of an MMFL scenario — allocation strategy, client
+arrival process, recruitment auction, task family — is a named entry in a
+``Registry``. Specs refer to entries by string key, so a JSON config can
+select any registered implementation, and adding a new one is a decorator
+on a function/class rather than a new driver fork:
+
+    @register_arrival_process("lunch_break")
+    class LunchBreak(ArrivalProcess): ...
+
+This module is dependency-free (no jax/numpy/repro imports) so the
+built-in implementations can self-register at import time without cycles.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List
+
+
+class Registry:
+    """A named string -> object mapping with decorator registration."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: Dict[str, Any] = {}
+
+    def register(self, name: str) -> Callable[[Any], Any]:
+        """Decorator: ``@REG.register("key")`` registers the decorated
+        object under ``key`` and returns it unchanged."""
+
+        def deco(obj: Any) -> Any:
+            if name in self._items and self._items[name] is not obj:
+                raise ValueError(f"duplicate {self.kind} registration: {name!r}")
+            self._items[name] = obj
+            return obj
+
+        return deco
+
+    def add(self, name: str, obj: Any) -> Any:
+        """Non-decorator registration (e.g. enum members)."""
+        return self.register(name)(obj)
+
+    def get(self, name: str) -> Any:
+        """Lookup; unknown keys raise with the list of valid names."""
+        try:
+            return self._items[name]
+        except KeyError:
+            valid = ", ".join(self.names()) or "(none)"
+            raise KeyError(f"unknown {self.kind} {name!r}; registered: {valid}") from None
+
+    def names(self) -> List[str]:
+        return sorted(self._items)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+
+ALLOCATORS = Registry("allocator")
+ARRIVAL_PROCESSES = Registry("arrival_process")
+AUCTIONS = Registry("auction")
+TASK_FAMILIES = Registry("task_family")
+
+register_allocator = ALLOCATORS.register
+register_arrival_process = ARRIVAL_PROCESSES.register
+register_auction = AUCTIONS.register
+register_task_family = TASK_FAMILIES.register

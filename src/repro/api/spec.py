@@ -1,0 +1,179 @@
+"""Declarative scenario specification: one serializable object per run.
+
+A ``ScenarioSpec`` is the single entry point for every MMFL experiment —
+allocation strategy x task mix x client population x incentive mechanism
+x runtime (sync lockstep rounds or the async FedAST-style engine). The
+tree is plain dataclasses, JSON round-trippable (``to_json``/``from_json``
+returns an equal spec), so sweeps and CI configs are data, not drivers.
+
+Registry keys (``allocation.strategy``, ``clients.arrival_process``,
+``auction.mechanism``, ``TaskSpec.family``) are validated against the
+registries at ``run_scenario`` time so a spec file can be authored before
+its plugin is imported.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def _from_dict(cls, data: Dict[str, Any]):
+    """Build dataclass ``cls`` from ``data``, rejecting unknown keys."""
+    if not isinstance(data, dict):
+        raise TypeError(f"{cls.__name__}: expected a dict, got {type(data).__name__}")
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(data) - names
+    if unknown:
+        msg = f"{cls.__name__}: unknown field(s) {sorted(unknown)}; valid: {sorted(names)}"
+        raise ValueError(msg)
+    return cls(**data)
+
+
+@dataclass
+class TaskSpec:
+    """One concurrently-trained model. ``family`` picks the task builder
+    (``synthetic`` FedTask MLPs, ``arch`` production LM configs);
+    ``options`` are family-specific knobs (e.g. ``n_range`` for synthetic,
+    ``preset``/``seq``/``batch``/``tau`` for arch)."""
+
+    name: str
+    family: str = "synthetic"
+    work: float = 1.0  # virtual-time cost of one local job (async)
+    options: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class ClientPopulationSpec:
+    """Who the clients are and when they are available."""
+
+    n_clients: int = 16
+    participation: float = 0.35  # sync: active fraction per round
+    dropout_prob: float = 0.0  # sync: straggler drop-out probability
+    # async speed heterogeneity (uniform | bimodal | lognormal)
+    speed_profile: str = "uniform"
+    speed_spread: float = 4.0
+    slow_fraction: float = 0.5
+    # async availability plugin (ARRIVAL_PROCESSES key)
+    arrival_process: str = "always_on"
+    arrival_options: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class AllocationSpec:
+    """Client->task allocator (ALLOCATORS key) and its fairness knob."""
+
+    strategy: str = "fedfair"
+    alpha: float = 3.0
+
+
+@dataclass
+class AuctionSpec:
+    """Recruitment auction producing the eligibility matrix. ``bid_model``
+    names a built-in bid generator (seeded by ``bid_seed``); ``bids`` may
+    instead carry an explicit (K, S) matrix."""
+
+    mechanism: str = "maxmin_fair"
+    budget: float = 29.0
+    bid_model: str = "uniform"
+    bid_seed: int = 0
+    bids: Optional[List[List[float]]] = None
+    options: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class RuntimeSpec:
+    """sync | async runtime and its training knobs. Defaults mirror
+    ``fed.trainer.TrainConfig`` / ``fed.async_engine.AsyncConfig`` so a
+    spec omitting a field reproduces the pre-API drivers exactly."""
+
+    mode: str = "sync"
+    # shared local-training knobs
+    rounds: int = 100
+    tau: int = 5
+    lr: float = 0.1
+    batch_size: int = 32
+    hidden: int = 64
+    depth: int = 2
+    deep_for: Tuple[str, ...] = ("synth-cifar",)
+    deep_depth: int = 3
+    eval_every: int = 1
+    # async (FedAST) knobs
+    total_arrivals: int = 400
+    buffer_size: int = 4
+    beta: float = 0.5
+    server_lr: float = 1.0
+    max_staleness: Optional[int] = None
+    # checkpoint/resume (arch sync engine)
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 10
+    resume: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("sync", "async"):
+            raise ValueError(f"mode must be 'sync' or 'async', got {self.mode!r}")
+        self.deep_for = tuple(self.deep_for)
+
+
+@dataclass
+class ScenarioSpec:
+    """The whole experiment: what to train, on whom, allocated how, under
+    which incentive mechanism and runtime."""
+
+    tasks: List[TaskSpec]
+    name: str = "scenario"
+    seed: int = 0
+    data_seed: int = 0
+    clients: ClientPopulationSpec = field(default_factory=ClientPopulationSpec)
+    allocation: AllocationSpec = field(default_factory=AllocationSpec)
+    auction: Optional[AuctionSpec] = None
+    runtime: RuntimeSpec = field(default_factory=RuntimeSpec)
+
+    def __post_init__(self):
+        self.tasks = [_from_dict(TaskSpec, t) if isinstance(t, dict) else t for t in self.tasks]
+        if not self.tasks:
+            raise ValueError("ScenarioSpec needs at least one TaskSpec")
+        if isinstance(self.clients, dict):
+            self.clients = _from_dict(ClientPopulationSpec, self.clients)
+        if isinstance(self.allocation, dict):
+            self.allocation = _from_dict(AllocationSpec, self.allocation)
+        if isinstance(self.auction, dict):
+            self.auction = _from_dict(AuctionSpec, self.auction)
+        if isinstance(self.runtime, dict):
+            self.runtime = _from_dict(RuntimeSpec, self.runtime)
+
+    @property
+    def family(self) -> str:
+        fams = {t.family for t in self.tasks}
+        if len(fams) != 1:
+            raise ValueError(f"all tasks must share one family, got {sorted(fams)}")
+        return next(iter(fams))
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["runtime"]["deep_for"] = list(self.runtime.deep_for)
+        if d["auction"] is None:
+            del d["auction"]
+        return d
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "ScenarioSpec":
+        return _from_dict(cls, data)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ScenarioSpec":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def load(cls, path: str) -> "ScenarioSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")

@@ -17,12 +17,39 @@ from enum import Enum
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import ALLOCATORS
 
 
 class AllocationStrategy(str, Enum):
     FEDFAIR = "fedfair"          # alpha-fair (Eq. 4)
     RANDOM = "random"            # uniform (== alpha=1)
     ROUND_ROBIN = "round_robin"  # Bhuyan & Moharir baseline
+
+
+# scenario-API registry: specs name allocators by string key; both the
+# coordinator and the sync trainer consume the resolved strategy. An
+# entry is either an AllocationStrategy member (the built-ins below) or
+# any callable (losses, alpha) -> (S,) probabilities — the plugin seam
+# consumed by custom_or_fedfair_probs.
+for _s in AllocationStrategy:
+    ALLOCATORS.add(_s.value, _s)
+
+
+def custom_or_fedfair_probs(strategy, losses, alpha):
+    """Dispatch the per-task probability rule for a resolved strategy:
+    Eq. 4 for the built-in FEDFAIR enum, otherwise call the registered
+    plugin and renormalise its output. RANDOM/ROUND_ROBIN are handled by
+    the callers (they need no loss-dependent probabilities)."""
+    if isinstance(strategy, AllocationStrategy):
+        return np.asarray(alpha_fair_probs(losses, alpha))
+    probs = np.maximum(np.asarray(strategy(losses, alpha), np.float64), 0.0)
+    tot = probs.sum()
+    if not np.isfinite(tot) or tot <= 0:
+        raise ValueError(
+            f"custom allocator returned invalid probabilities: {probs}")
+    return probs / tot
 
 
 def alpha_fair_probs(losses, alpha):

@@ -23,6 +23,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.api.registry import register_auction
+
 
 @dataclass
 class AuctionResult:
@@ -237,3 +239,30 @@ def random_within_budget(rng: np.random.Generator, bids: np.ndarray,
         take[s] = len(w)
         spent += per_task - left
     return AuctionResult(winners, payments, take, spent)
+
+
+# ------------------------------------------------------------------ registry
+# Scenario-API adapters: every mechanism under the uniform signature
+# fn(bids, budget, *, rng=None, **options) -> AuctionResult, so an
+# AuctionSpec can name any of them by key.
+
+register_auction("maxmin_fair")(
+    lambda bids, budget, *, rng=None: maxmin_fair_auction(bids, budget))
+register_auction("budget_fair")(
+    lambda bids, budget, *, rng=None: budget_fair_auction(bids, budget))
+register_auction("gmmfair")(
+    lambda bids, budget, *, rng=None: gmmfair(bids, budget))
+register_auction("greedy_within_budget")(
+    lambda bids, budget, *, rng=None: greedy_within_budget(bids, budget))
+
+
+@register_auction("random_within_budget")
+def _random_within_budget(bids, budget, *, rng=None):
+    rng = rng if rng is not None else np.random.default_rng(0)
+    return random_within_budget(rng, bids, budget)
+
+
+@register_auction("val_threshold")
+def _val_threshold(bids, budget, *, rng=None, threshold=0.4):
+    del budget  # posted price: no budget constraint
+    return val_threshold(bids, threshold)

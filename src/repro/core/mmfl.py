@@ -18,7 +18,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.allocation import AllocationStrategy, alpha_fair_probs
+from repro.core.allocation import (AllocationStrategy,
+                                   custom_or_fedfair_probs)
 
 
 @dataclass
@@ -76,8 +77,10 @@ class MMFLCoordinator:
                         break
             else:
                 pe = probs * elig
-                pe = pe / pe.sum()
-                s = self._rng.choice(S, p=pe)
+                tot = pe.sum()
+                if tot <= 0:     # custom allocator zeroed all eligible tasks
+                    continue
+                s = self._rng.choice(S, p=pe / tot)
             out[self.task_names[s]].append(i)
         self._round += 1
         for n in self.task_names:
@@ -85,8 +88,11 @@ class MMFLCoordinator:
         return {n: np.array(v, np.int64) for n, v in out.items()}
 
     def _current_probs(self) -> Optional[np.ndarray]:
-        """Eq. 4 probabilities over tasks from prevailing losses, handling
-        not-yet-reported tasks. None means round-robin."""
+        """Per-task allocation probabilities from prevailing losses,
+        handling not-yet-reported tasks. None means round-robin. The
+        strategy may be an AllocationStrategy (Eq. 4 for FEDFAIR) or any
+        callable (losses, alpha) -> (S,) probs registered via
+        ``@register_allocator``."""
         S = len(self.task_names)
         if self.strategy == AllocationStrategy.ROUND_ROBIN:
             return None
@@ -95,7 +101,7 @@ class MMFLCoordinator:
             return np.ones(S) / S
         losses = np.where(finite, self.losses,
                           np.nanmax(np.where(finite, self.losses, np.nan)))
-        return np.asarray(alpha_fair_probs(losses, self.alpha))
+        return custom_or_fedfair_probs(self.strategy, losses, self.alpha)
 
     def assign_next(self, client_id: int) -> Optional[int]:
         """Async (FedAST-style) allocation: a COMPLETING client immediately
@@ -109,14 +115,52 @@ class MMFLCoordinator:
         S = len(self.task_names)
         probs = self._current_probs()
         if probs is None:                            # round robin
+            # total branch: never falls through to the probabilistic path
+            # (probs is None there), even if eligibility is degenerate
             for off in range(S):
                 s = (self._async_rr + off) % S
                 if elig[s]:
                     self._async_rr = (s + 1) % S
                     return s
+            return None
         pe = probs * elig
-        pe = pe / pe.sum()
-        return int(self._rng.choice(S, p=pe))
+        tot = pe.sum()
+        if tot <= 0:             # custom allocator zeroed all eligible tasks
+            return None
+        return int(self._rng.choice(S, p=pe / tot))
+
+    def state_dict(self) -> Dict:
+        """Full JSON-serializable coordinator state — round counter, RNG
+        stream, and per-task stats — so checkpoint/resume reproduces the
+        exact allocation sequence of an uninterrupted run."""
+        return {
+            "round": self._round,
+            "async_rr": self._async_rr,
+            "rng_state": self._rng.bit_generator.state,
+            "tasks": {n: {"loss": t.loss,
+                          "rounds_trained": t.rounds_trained,
+                          "clients_last_round": t.clients_last_round}
+                      for n, t in self.tasks.items()},
+        }
+
+    def load_state(self, state: Dict):
+        """Inverse of ``state_dict``. Tolerates the legacy checkpoint
+        payload ``{"losses": {task: loss}}`` (pre-PR2), which restores
+        losses but not the round/RNG stream."""
+        if "rng_state" not in state:               # legacy format
+            for n, loss in state.get("losses", {}).items():
+                if n in self.tasks:
+                    self.report(n, loss)
+            return
+        self._round = int(state["round"])
+        self._async_rr = int(state["async_rr"])
+        self._rng.bit_generator.state = state["rng_state"]
+        for n, ts in state["tasks"].items():
+            if n in self.tasks:
+                t = self.tasks[n]
+                t.loss = float(ts["loss"])
+                t.rounds_trained = int(ts["rounds_trained"])
+                t.clients_last_round = int(ts["clients_last_round"])
 
     def client_weights(self, client_ids: np.ndarray,
                        p_k: Optional[np.ndarray] = None) -> np.ndarray:

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.arrivals import get_arrival_process
 from repro.core.allocation import AllocationStrategy
 from repro.core.mmfl import MMFLCoordinator
 from repro.fed.client import accuracy
@@ -59,6 +60,10 @@ class AsyncConfig:
     speed_profile: str = "uniform"
     speed_spread: float = 4.0
     slow_fraction: float = 0.5
+    # availability plugin (repro.api.arrivals registry): when a completing
+    # client may START its next job. "always_on" reproduces PR 1 exactly.
+    arrival_process: str = "always_on"
+    arrival_options: dict = field(default_factory=dict)
     max_staleness: Optional[int] = None   # drop updates staler than this
     # local training (mirrors sync TrainConfig)
     tau: int = 5
@@ -196,6 +201,11 @@ class AsyncMMFLEngine:
         self.speeds = client_speeds(
             cfg.speed_profile, self.K, np.random.default_rng(cfg.seed + 1),
             spread=cfg.speed_spread, slow_fraction=cfg.slow_fraction)
+        # availability plugin draws from its OWN stream (seed + 2) so
+        # enabling one never perturbs the allocator's RNG
+        self.arrival = get_arrival_process(cfg.arrival_process,
+                                           cfg.arrival_options)
+        self.arrival.reset(self.K, np.random.default_rng(cfg.seed + 2))
 
     @classmethod
     def from_fed_tasks(cls, tasks: Sequence[FedTask], cfg: AsyncConfig,
@@ -223,10 +233,13 @@ class AsyncMMFLEngine:
         v = self._version[s]
         self._retain(s, v, self._params[s])
         self._assignments.append((client, s))
+        # the arrival process may defer the job's start (off-window /
+        # partial participation); the model version is pinned at dispatch
+        start = self.arrival.next_start(client, t)
         dur = self.tasks[s].work / self.speeds[client]
         self._seq += 1
         heapq.heappush(self._events,
-                       (t + dur, self._seq, _Job(client, s, v, t)))
+                       (start + dur, self._seq, _Job(client, s, v, start)))
 
     def _flush(self, s: int, t: float):
         cfg = self.cfg

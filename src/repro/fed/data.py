@@ -104,6 +104,13 @@ _RECIPES = {
 }
 
 
+def task_seed(seed: int, task_idx: int) -> int:
+    """Per-task data seed derivation shared by ``standard_tasks`` and the
+    scenario API's synthetic task family — ONE formula, so specs and the
+    legacy helpers always build bit-identical tasks."""
+    return seed * 1000 + task_idx * 17 + 3
+
+
 def standard_tasks(names, n_clients, seed=0, n_range=(150, 250),
                    non_iid=True):
     tasks = []
@@ -111,6 +118,6 @@ def standard_tasks(names, n_clients, seed=0, n_range=(150, 250),
         base = name.split("#")[0]            # allow duplicates: "synth-cifar#2"
         kw = dict(_RECIPES[base])
         tasks.append(make_synthetic_task(
-            seed * 1000 + i * 17 + 3, name, n_clients, n_range=n_range,
+            task_seed(seed, i), name, n_clients, n_range=n_range,
             non_iid=non_iid, **kw))
     return tasks

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.allocation import AllocationStrategy, alpha_fair_probs
+from repro.core.allocation import (AllocationStrategy,
+                                   custom_or_fedfair_probs)
 from repro.fed.client import accuracy, cohort_local_update_ids, init_mlp
 from repro.fed.data import FedTask
 from repro.fed.server import aggregate
@@ -156,7 +157,8 @@ class MMFLTrainer:
         if cfg.strategy == AllocationStrategy.RANDOM:
             p = np.ones(self.S) / self.S
         else:
-            p = np.asarray(alpha_fair_probs(losses, cfg.alpha))
+            # FEDFAIR (Eq. 4) or a registered custom allocator callable
+            p = custom_or_fedfair_probs(cfg.strategy, losses, cfg.alpha)
         for i in active:
             pe = p * self.elig[i]
             tot = pe.sum()
@@ -196,5 +198,6 @@ class MMFLTrainer:
                 print(f"  round {r+1:4d} accs="
                       + " ".join(f"{a:.3f}" for a in accs)
                       + f" min={accs.min():.3f}")
+        self.params = params    # final per-task models (RunResult parity)
         return History(np.array(acc_hist), np.array(alloc_hist),
                        alloc=np.array(assign_hist))

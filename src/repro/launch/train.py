@@ -1,29 +1,34 @@
 """MMFL training launcher: concurrent fair training of multiple
 architectures with FedFairMMFL client-task allocation.
 
-This is the production driver shape: an MMFLCoordinator allocating client
-(data-silo) shards to per-arch sharded train steps each round. On the CPU
-container it runs reduced ("tiny") configs end-to-end; on a real cluster the
-same code path jits against make_production_mesh() with the partition specs
-from repro.sharding (see dryrun.py, which proves every arch x shape lowers).
+A thin CLI over the scenario API: flags (or a ``--spec scenario.json``
+file) build a ``ScenarioSpec``, and ``repro.api.run_scenario`` drives the
+sync round loop or the async FedAST-style engine behind the shared Engine
+protocol. On the CPU container it runs reduced ("tiny") configs
+end-to-end; on a real cluster the same code path jits against
+make_production_mesh() with the partition specs from repro.sharding (see
+dryrun.py, which proves every arch x shape lowers).
 
-Example (CPU):
-  PYTHONPATH=src python -m repro.launch.train \
-      --archs smollm-135m,qwen3-0.6b,qwen2-moe-a2.7b \
+Examples (CPU):
+  PYTHONPATH=src python -m repro.launch.train \\
+      --archs smollm-135m,qwen3-0.6b,qwen2-moe-a2.7b \\
       --preset tiny --rounds 20 --clients 16 --alpha 3
+  PYTHONPATH=src python -m repro.launch.train \\
+      --spec examples/specs/tiny_two_task.json
 """
 from __future__ import annotations
 
 import argparse
-import time
+import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (AllocationSpec, ClientPopulationSpec, RuntimeSpec,
+                       ScenarioSpec, TaskSpec, run_scenario)
 from repro.configs import get_config, smoke_config
 from repro.core.allocation import AllocationStrategy
-from repro.core.mmfl import MMFLCoordinator
 from repro.fed.trainer import task_round_key
 from repro.models import get_api
 from repro.optim import adamw
@@ -49,7 +54,10 @@ def build_task(arch: str, preset: str, seq: int, batch: int, tau: int = 1,
     cfg = smoke_config(arch) if preset == "tiny" else get_config(arch)
     cfg = cfg.replace(ssm_chunk=min(cfg.ssm_chunk, max(8, seq // 4)))
     api = get_api(cfg)
-    params = api.init_params(jax.random.PRNGKey(hash(arch) % 2**31), cfg)
+    # crc32 (not hash()) keying: PYTHONHASHSEED-independent, so model init
+    # is reproducible across processes
+    params = api.init_params(
+        jax.random.PRNGKey(zlib.crc32(arch.encode()) % 2**31), cfg)
     opt = adamw(lr=3e-3, max_grad_norm=1.0)
     opt_state = opt.init(params)
 
@@ -190,31 +198,42 @@ class ArchAsyncTask:
         return float(self._eval(params))
 
 
-def run_async(args, archs, tasks, data):
-    from repro.fed.async_engine import AsyncConfig, AsyncMMFLEngine
-
-    adapters = [ArchAsyncTask(a, i, tasks[a], data[a], tau=max(args.tau, 1))
-                for i, a in enumerate(archs)]
-    cfg = AsyncConfig(
-        total_arrivals=args.arrivals, buffer_size=args.buffer,
-        beta=args.beta, alpha=args.alpha,
-        strategy=AllocationStrategy(args.strategy),
-        speed_profile=args.speed_profile, speed_spread=args.speed_spread,
-        seed=args.seed)
-    eng = AsyncMMFLEngine(adapters, cfg)
-    print(f"ASYNC MMFL: {archs} buffer={args.buffer} beta={args.beta} "
-          f"profile={args.speed_profile} on {jax.device_count()} device(s)")
-    t0 = time.time()
-    hist = eng.run(verbose=True)
-    print(f"processed {int(hist.arrivals.sum())} arrivals "
-          f"({len(hist.time)} aggregations) in {time.time()-t0:.1f}s "
-          f"wall, {hist.time[-1] if len(hist.time) else 0.0:.1f} virtual")
-    print("final losses:", {a: round(eng.coord.tasks[a].loss, 3)
-                            for a in archs})
+def build_scenario(args) -> ScenarioSpec:
+    """Map the CLI flags onto a ScenarioSpec (the args are the legacy
+    interface; the spec is the canonical one)."""
+    archs = args.archs.split(",")
+    task_opts = {"preset": args.preset, "seq": args.seq,
+                 "batch": args.batch, "tau": args.tau}
+    return ScenarioSpec(
+        name="launch-train",
+        seed=args.seed,
+        data_seed=args.seed,
+        tasks=[TaskSpec(name=a, family="arch", options=dict(task_opts))
+               for a in archs],
+        clients=ClientPopulationSpec(
+            n_clients=args.clients,
+            participation=args.participation,
+            speed_profile=args.speed_profile,
+            speed_spread=args.speed_spread,
+            arrival_process=args.arrival_process),
+        allocation=AllocationSpec(strategy=args.strategy, alpha=args.alpha),
+        runtime=RuntimeSpec(
+            mode="async" if args.async_mode else "sync",
+            rounds=args.rounds,
+            tau=args.tau,
+            total_arrivals=args.arrivals,
+            buffer_size=args.buffer,
+            beta=args.beta,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            resume=args.resume))
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default=None,
+                    help="ScenarioSpec JSON file; overrides all other "
+                         "flags (the declarative interface)")
     ap.add_argument("--archs", default="smollm-135m,qwen3-0.6b")
     ap.add_argument("--preset", choices=["tiny", "full"], default="tiny")
     ap.add_argument("--rounds", type=int, default=20)
@@ -244,70 +263,33 @@ def main():
     ap.add_argument("--speed-profile", default="bimodal",
                     choices=["uniform", "bimodal", "lognormal"])
     ap.add_argument("--speed-spread", type=float, default=4.0)
+    ap.add_argument("--arrival-process", default="always_on",
+                    help="async availability plugin "
+                         "(always_on | bursty | poisson | registered)")
     args = ap.parse_args()
 
-    archs = args.archs.split(",")
-    tasks = {a: build_task(a, args.preset, args.seq, args.batch,
-                           tau=args.tau)
-             for a in archs}
-    data = {a: make_dataset(None, tasks[a]["cfg"], args.clients, 4,
-                            args.seq, seed=args.seed + i)
-            for i, a in enumerate(archs)}
-    if args.async_mode:
-        run_async(args, archs, tasks, data)
-        return
-    coord = MMFLCoordinator(
-        task_names=archs, n_clients=args.clients, alpha=args.alpha,
-        strategy=AllocationStrategy(args.strategy),
-        participation=args.participation, seed=args.seed)
-    rng = np.random.default_rng(args.seed)
+    spec = (ScenarioSpec.load(args.spec) if args.spec
+            else build_scenario(args))
+    names = [t.name for t in spec.tasks]
+    if spec.runtime.mode == "async":
+        print(f"ASYNC MMFL: {names} buffer={spec.runtime.buffer_size} "
+              f"beta={spec.runtime.beta} "
+              f"profile={spec.clients.speed_profile} "
+              f"arrival={spec.clients.arrival_process} "
+              f"on {jax.device_count()} device(s)")
+    else:
+        print(f"MMFL concurrent training: {names} on "
+              f"{jax.device_count()} device(s)")
 
-    ckpt = None
-    start_round = 0
-    if args.checkpoint_dir:
-        from repro.checkpoint import CheckpointManager
-        ckpt = CheckpointManager(args.checkpoint_dir)
-        if args.resume and ckpt.latest_step() is not None:
-            step, saved, coord_state = ckpt.restore()
-            for a in archs:
-                if a in saved:
-                    tasks[a]["params"] = jax.tree.map(
-                        jnp.asarray, saved[a]["params"])
-                    tasks[a]["opt"] = jax.tree.map(
-                        jnp.asarray, saved[a]["opt"])
-            for a, loss in coord_state.get("losses", {}).items():
-                if a in coord.tasks:
-                    coord.report(a, loss)
-            start_round = step
-            print(f"resumed from round {step}")
+    result = run_scenario(spec, verbose=True)
 
-    print(f"MMFL concurrent training: {archs} on "
-          f"{jax.device_count()} device(s)")
-    for r in range(start_round, args.rounds):
-        alloc = coord.next_round()
-        t0 = time.time()
-        line = []
-        for a in archs:
-            ids = alloc[a]
-            if len(ids) == 0:
-                line.append(f"{a}: -")
-                continue
-            t = tasks[a]
-            w = coord.client_weights(ids)
-            batch = assemble_batch(t, data[a], ids, w, rng)
-            loss, t["params"], t["opt"] = t["step"](t["params"], t["opt"],
-                                                    batch)
-            coord.report(a, float(loss))
-            line.append(f"{a}: {float(loss):.3f} ({len(ids)}c)")
-        print(f"round {r+1:3d} [{time.time()-t0:5.1f}s] " + " | ".join(line))
-        if ckpt and (r + 1) % args.checkpoint_every == 0:
-            ckpt.save(r + 1,
-                      {a: {"params": tasks[a]["params"],
-                           "opt": tasks[a]["opt"]} for a in archs},
-                      coordinator_state={"losses": {
-                          a: coord.tasks[a].loss for a in archs}})
-    print("final losses:", {a: round(coord.tasks[a].loss, 3)
-                            for a in archs})
+    if result.mode == "async":
+        print(f"processed {int(result.arrivals.sum())} arrivals "
+              f"({len(result.time)} aggregations) in "
+              f"{result.wall_time:.1f}s wall, "
+              f"{result.virtual_time:.1f} virtual")
+    print("final losses:", {n: round(v, 3)
+                            for n, v in result.final_loss.items()})
 
 
 if __name__ == "__main__":

@@ -61,3 +61,60 @@ def test_round_robin_strategy():
     counts = sorted(len(v) for v in alloc.values())
     assert sum(counts) == 9
     assert counts[-1] - counts[0] <= 1      # balanced
+
+
+def test_assign_next_round_robin_total_with_restricted_eligibility():
+    """Regression: the round-robin branch of assign_next must be total —
+    it used to be able to fall through to the probabilistic path with
+    probs=None (TypeError). With any eligibility pattern it must return
+    an eligible task (or None), never raise."""
+    elig = np.zeros((4, 3), bool)
+    elig[0, 2] = True                      # only the last task
+    elig[1, 0] = elig[1, 1] = True
+    elig[2] = True
+    # client 3 eligible for nothing
+    c = MMFLCoordinator(["a", "b", "c"], n_clients=4, seed=0,
+                        strategy=AllocationStrategy.ROUND_ROBIN,
+                        eligibility=elig)
+    for _ in range(50):
+        for i in range(4):
+            s = c.assign_next(i)
+            if i == 3:
+                assert s is None
+            else:
+                assert s is not None and elig[i, s]
+
+
+def test_state_dict_roundtrip_reproduces_allocations():
+    """Checkpoint satellite: round counter + RNG stream + per-task stats
+    survive state_dict/load_state, so a restored coordinator produces the
+    exact allocation sequence of an uninterrupted one."""
+    import json
+
+    def fresh():
+        c = MMFLCoordinator(["a", "b"], n_clients=12, participation=0.5,
+                            seed=3)
+        c.report("a", 0.4)
+        c.report("b", 0.8)
+        return c
+
+    c1 = fresh()
+    for _ in range(3):
+        c1.next_round()
+    state = json.loads(json.dumps(c1.state_dict()))   # JSON-serializable
+    tail1 = [c1.next_round() for _ in range(3)]
+
+    c2 = fresh()
+    c2.load_state(state)
+    assert c2._round == 3
+    tail2 = [c2.next_round() for _ in range(3)]
+    for a1, a2 in zip(tail1, tail2):
+        assert a1.keys() == a2.keys()
+        for k in a1:
+            np.testing.assert_array_equal(a1[k], a2[k])
+
+
+def test_load_state_legacy_losses_payload():
+    c = MMFLCoordinator(["a", "b"], n_clients=4, seed=0)
+    c.load_state({"losses": {"a": 0.7, "b": 0.2}})
+    assert c.tasks["a"].loss == 0.7 and c.tasks["b"].loss == 0.2

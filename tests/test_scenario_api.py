@@ -1,0 +1,333 @@
+"""Scenario API: spec JSON round-trip, registry dispatch, arrival
+processes, auction wiring, and sync-vs-async parity through run_scenario."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    ALLOCATORS,
+    ARRIVAL_PROCESSES,
+    AUCTIONS,
+    TASK_FAMILIES,
+    AllocationSpec,
+    AuctionSpec,
+    ClientPopulationSpec,
+    Registry,
+    RuntimeSpec,
+    ScenarioSpec,
+    TaskSpec,
+    get_arrival_process,
+    run_scenario,
+)
+
+
+def two_task_spec(**runtime_kw):
+    mode = runtime_kw.pop("mode", "sync")
+    return ScenarioSpec(
+        name="t2",
+        seed=0,
+        tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]}),
+               TaskSpec("synth-fmnist", options={"n_range": [40, 60]})],
+        clients=ClientPopulationSpec(n_clients=10, participation=1.0),
+        runtime=RuntimeSpec(mode=mode, **runtime_kw))
+
+
+# ------------------------------------------------------------------- spec
+
+def test_spec_json_roundtrip_equality():
+    spec = ScenarioSpec(
+        name="rt",
+        seed=7,
+        data_seed=3,
+        tasks=[TaskSpec("synth-mnist", work=2.0,
+                        options={"n_range": [50, 70]}),
+               TaskSpec("synth-cifar")],
+        clients=ClientPopulationSpec(n_clients=12, participation=0.4,
+                                     speed_profile="bimodal",
+                                     arrival_process="poisson",
+                                     arrival_options={"mean_idle": 1.5}),
+        allocation=AllocationSpec(strategy="round_robin", alpha=5.0),
+        auction=AuctionSpec(mechanism="gmmfair", budget=17.0,
+                            bid_model="exp4", bid_seed=4),
+        runtime=RuntimeSpec(mode="async", total_arrivals=99,
+                            buffer_size=7, beta=0.25, max_staleness=3))
+    back = ScenarioSpec.from_json(spec.to_json())
+    assert back == spec
+    # and the JSON itself is stable (canonical dict form)
+    assert json.loads(back.to_json()) == json.loads(spec.to_json())
+
+
+def test_spec_roundtrip_without_auction():
+    spec = two_task_spec(rounds=3)
+    assert spec.auction is None
+    back = ScenarioSpec.from_json(spec.to_json())
+    assert back == spec and back.auction is None
+
+
+def test_spec_unknown_field_rejected():
+    with pytest.raises(ValueError, match="unknown field"):
+        ScenarioSpec.from_dict({"tasks": [{"name": "synth-mnist"}],
+                                "rounds": 5})           # rounds ∈ runtime
+    with pytest.raises(ValueError, match="TaskSpec"):
+        ScenarioSpec.from_dict({"tasks": [{"nam": "synth-mnist"}]})
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        ScenarioSpec(tasks=[])
+    with pytest.raises(ValueError, match="mode"):
+        RuntimeSpec(mode="warp")
+    mixed = ScenarioSpec(tasks=[TaskSpec("a", family="synthetic"),
+                                TaskSpec("b", family="arch")])
+    with pytest.raises(ValueError, match="one family"):
+        _ = mixed.family
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_unknown_key_lists_valid_names():
+    with pytest.raises(KeyError, match="fedfair"):
+        ALLOCATORS.get("fedfairest")
+    with pytest.raises(KeyError, match="maxmin_fair"):
+        AUCTIONS.get("dutch")
+    with pytest.raises(KeyError, match="always_on"):
+        ARRIVAL_PROCESSES.get("sometimes")
+    with pytest.raises(KeyError, match="synthetic"):
+        TASK_FAMILIES.get("quantum")
+
+
+def test_registry_contents():
+    assert {"fedfair", "random", "round_robin"} <= set(ALLOCATORS.names())
+    assert {"maxmin_fair", "budget_fair", "gmmfair", "val_threshold",
+            "greedy_within_budget",
+            "random_within_budget"} <= set(AUCTIONS.names())
+    assert {"always_on", "bursty",
+            "poisson"} <= set(ARRIVAL_PROCESSES.names())
+    assert {"synthetic", "arch"} <= set(TASK_FAMILIES.names())
+
+
+def test_registry_decorator_and_duplicate_rejection():
+    reg = Registry("widget")
+
+    @reg.register("w1")
+    def w1():
+        return 1
+
+    assert reg.get("w1") is w1
+    assert "w1" in reg and reg.names() == ["w1"]
+    with pytest.raises(ValueError, match="duplicate"):
+        reg.register("w1")(lambda: 2)
+
+
+def test_unknown_registry_key_fails_fast_in_run_scenario():
+    spec = two_task_spec(rounds=1)
+    spec.allocation.strategy = "psychic"
+    with pytest.raises(KeyError, match="allocator"):
+        run_scenario(spec)
+
+
+# -------------------------------------------------------- arrival processes
+
+def test_always_on_is_identity():
+    p = get_arrival_process("always_on")
+    p.reset(4, np.random.default_rng(0))
+    assert p.next_start(2, 13.7) == 13.7
+
+
+def test_bursty_starts_only_in_on_windows():
+    p = get_arrival_process("bursty", {"period": 10.0, "duty": 0.3})
+    rng = np.random.default_rng(0)
+    p.reset(8, rng)
+    for c in range(8):
+        for t in np.linspace(0.0, 40.0, 50):
+            s = p.next_start(c, float(t))
+            assert s >= t
+            pos = (s - p._phase[c]) % p.period
+            # pos ≈ period is the window boundary (mod-arith float wrap)
+            assert (pos < p.duty * p.period + 1e-9
+                    or pos > p.period - 1e-6)
+
+
+def test_poisson_adds_exponential_idle():
+    p = get_arrival_process("poisson", {"mean_idle": 2.0})
+    p.reset(4, np.random.default_rng(0))
+    gaps = np.array([p.next_start(0, 5.0) - 5.0 for _ in range(2000)])
+    assert np.all(gaps >= 0)
+    assert abs(gaps.mean() - 2.0) < 0.2    # Exp(2) mean
+
+
+def test_arrival_process_bad_options():
+    with pytest.raises(ValueError):
+        get_arrival_process("bursty", {"duty": 0.0})
+    with pytest.raises(ValueError):
+        get_arrival_process("poisson", {"mean_idle": -1.0})
+
+
+def test_arrival_process_stretches_virtual_clock():
+    """Poisson partial participation must slow virtual progress but not
+    change WHAT is computed (same seeds, same allocator stream)."""
+    kw = dict(mode="async", total_arrivals=30, buffer_size=3, tau=2)
+    base = run_scenario(two_task_spec(**kw))
+    spec = two_task_spec(**kw)
+    spec.clients.arrival_process = "poisson"
+    spec.clients.arrival_options = {"mean_idle": 2.0}
+    slow = run_scenario(spec)
+    assert slow.virtual_time > base.virtual_time
+    # same update budget is still processed, idle gaps or not
+    assert slow.arrivals.sum() == base.arrivals.sum() == 30
+
+
+# ----------------------------------------------------------- run_scenario
+
+def test_run_scenario_sync_async_parity_1e6():
+    """Acceptance: the same spec through run_scenario, sync vs async
+    (equal speeds, buffer == cohort), yields the same params to 1e-6 —
+    the existing engine-equivalence setup, now through the unified API."""
+    K = 10
+    common = dict(
+        tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]})],
+        clients=ClientPopulationSpec(n_clients=K, participation=1.0),
+        seed=0)
+    sync = run_scenario(ScenarioSpec(
+        name="s", runtime=RuntimeSpec(mode="sync", rounds=1, tau=3),
+        **common))
+    asyn = run_scenario(ScenarioSpec(
+        name="a", runtime=RuntimeSpec(mode="async", total_arrivals=K,
+                                      buffer_size=K, tau=3),
+        **common))
+    assert sync.mode == "sync" and asyn.mode == "async"
+    for a, b in zip(jax.tree_util.tree_leaves(sync.params[0]),
+                    jax.tree_util.tree_leaves(asyn.params[0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+def test_run_scenario_matches_legacy_trainer_exactly():
+    from repro.core.allocation import AllocationStrategy
+    from repro.fed import MMFLTrainer, TrainConfig, standard_tasks
+
+    spec = two_task_spec(rounds=4, tau=2)
+    spec.clients.participation = 0.5
+    r = run_scenario(spec)
+    tasks = standard_tasks(["synth-mnist", "synth-fmnist"], n_clients=10,
+                           seed=0, n_range=(40, 60))
+    h = MMFLTrainer(tasks, TrainConfig(
+        rounds=4, tau=2, participation=0.5, seed=0,
+        strategy=AllocationStrategy.FEDFAIR)).run()
+    np.testing.assert_array_equal(r.acc, h.acc)
+    np.testing.assert_array_equal(r.alloc, h.alloc)
+
+
+def test_run_result_json_and_fairness():
+    r = run_scenario(two_task_spec(rounds=2, tau=2))
+    assert set(r.final_loss) == {"synth-mnist", "synth-fmnist"}
+    for k in ("min_acc", "var_acc", "cosine_uniformity", "worst_task"):
+        assert k in r.fairness
+    payload = r.to_json()
+    json.dumps(payload)                 # JSON-native
+    assert payload["spec"]["name"] == "t2"
+    assert np.asarray(payload["acc"]).shape == (2, 2)
+
+
+def test_run_scenario_auction_restricts_eligibility():
+    spec = two_task_spec(mode="async", total_arrivals=40, buffer_size=4,
+                         tau=2)
+    spec.auction = AuctionSpec(mechanism="gmmfair", budget=4.0,
+                               bid_model="exp4", bid_seed=0)
+    r = run_scenario(spec)
+    assert r.auction["mechanism"] == "gmmfair"
+    assert r.auction["min_take_up"] <= 10
+    # dispatch log honours the auction winners
+    from repro.api import build_eligibility
+    elig, _ = build_eligibility(spec.auction, 10, 2)
+    assert all(elig[c, s] for c, s in r.assignments)
+
+
+def test_custom_registered_allocator_is_invoked():
+    """A callable registered via @register_allocator must actually drive
+    allocation (not silently fall back to alpha-fair)."""
+    from repro.api import register_allocator
+
+    calls = []
+
+    @register_allocator("winner_takes_all")
+    def winner_takes_all(losses, alpha):
+        calls.append(True)
+        p = np.zeros(len(losses))
+        p[int(np.argmax(losses))] = 1.0        # everything to worst task
+        return p
+
+    spec = two_task_spec(rounds=3, tau=2)
+    spec.allocation.strategy = "winner_takes_all"
+    r = run_scenario(spec)
+    assert calls, "custom allocator was never invoked"
+    # after round 1 every client goes to the single worst task
+    assert (r.alloc_counts[1:].min(axis=1) == 0).all()
+    # async path dispatches through the same plugin
+    spec_a = two_task_spec(mode="async", total_arrivals=20, buffer_size=4,
+                           tau=2)
+    spec_a.allocation.strategy = "winner_takes_all"
+    calls.clear()
+    run_scenario(spec_a)
+    assert calls
+
+
+def test_custom_allocator_invalid_probs_rejected():
+    from repro.core.allocation import custom_or_fedfair_probs
+
+    with pytest.raises(ValueError, match="invalid"):
+        custom_or_fedfair_probs(lambda losses, alpha: np.zeros(2),
+                                np.array([0.5, 0.5]), 3.0)
+
+
+def test_custom_allocator_zero_prob_on_eligible_tasks_idles_client():
+    """A custom allocator may put zero mass on ALL of a client's eligible
+    tasks; the coordinator must idle that client, not crash on a NaN
+    probability vector."""
+    from repro.core.mmfl import MMFLCoordinator
+
+    elig = np.array([[False, True], [True, True]])
+    coord = MMFLCoordinator(
+        ["easy", "hard"], n_clients=2, seed=0, eligibility=elig,
+        strategy=lambda losses, alpha: np.array([1.0, 0.0]))
+    coord.report("easy", 0.9)
+    coord.report("hard", 0.1)
+    # client 0 eligible only for the zero-probability task -> idles
+    assert coord.assign_next(0) is None
+    assert coord.assign_next(1) == 0
+    alloc = coord.next_round()
+    assert list(alloc["easy"]) == [1] and len(alloc["hard"]) == 0
+
+
+def test_arch_async_engine_receives_eligibility():
+    """Regression: ArchFamily.async_engine must forward the auction
+    eligibility matrix to the AsyncMMFLEngine coordinator."""
+    from repro.api import TASK_FAMILIES
+
+    spec = ScenarioSpec(
+        name="arch-elig",
+        tasks=[TaskSpec("smollm-135m", family="arch",
+                        options={"preset": "tiny", "seq": 16, "batch": 2,
+                                 "tau": 1})],
+        clients=ClientPopulationSpec(n_clients=4),
+        runtime=RuntimeSpec(mode="async", total_arrivals=4,
+                            buffer_size=2))
+    elig = np.array([[True], [False], [True], [False]])
+    runner = TASK_FAMILIES.get("arch")().async_engine(spec, elig)
+    np.testing.assert_array_equal(runner.engine.coord.eligibility, elig)
+
+
+def test_build_eligibility_explicit_bids_and_shape_check():
+    from repro.api import build_eligibility
+
+    bids = [[0.1, 0.9], [0.2, 0.1], [0.9, 0.2]]
+    elig, res = build_eligibility(
+        AuctionSpec(mechanism="val_threshold", budget=0.0, bids=bids,
+                    options={"threshold": 0.5}), 3, 2)
+    np.testing.assert_array_equal(
+        elig, [[True, False], [True, True], [False, True]])
+    with pytest.raises(ValueError, match="shape"):
+        build_eligibility(
+            AuctionSpec(mechanism="val_threshold", bids=bids), 4, 2)
