@@ -13,6 +13,7 @@ AUCTIONS registry.
 from __future__ import annotations
 
 import json
+import time
 
 import numpy as np
 
@@ -332,6 +333,64 @@ def exp9_async_vs_sync(fast=True, seeds=(0, 1), target=0.55,
     out["config"] = {"clients": K, "rounds": rounds, "arrivals": arrivals,
                      "profile": profile, "spread": spread,
                      "target_min_acc": target, "seeds": list(seeds)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out
+
+
+def exp10_backend_scaling(fast=True, json_path="BENCH_backends.json"):
+    """ExecutionBackend headline: wall-time per round, serial vs vmap vs
+    sharded, as the cohort grows — the SAME spec through run_scenario,
+    differing only in ``runtime.backend``. Single task + full
+    participation pins the cohort size at K exactly. Each (K, backend)
+    point is run once for compile warm-up (compilations persist in the
+    module-level backend caches), then timed DIFFERENTIALLY — wall(1+R
+    rounds) minus wall(1 round), over R — so one-off setup (data
+    generation, engine construction) is excluded from the per-round
+    figure. The parity column is the max |loss - serial loss| over the
+    long run's curve (the backends must agree ≤ 1e-6)."""
+    cohorts = [8, 16] if fast else [8, 16, 32, 64]
+    rounds = 5 if fast else 12
+    backends = ["serial", "vmap", "sharded"]
+    out = {}
+    for K in cohorts:
+        per = {}
+        serial_loss = None
+        for backend in backends:
+            def make(rounds_):
+                return _scenario(["synth-mnist"], "random", rounds_, 0,
+                                 n_range=(60, 90), n_clients=K,
+                                 participation=1.0, tau=5,
+                                 backend=backend)
+
+            run_scenario(make(1))              # compile warm-up
+            t0 = time.perf_counter()
+            run_scenario(make(1))              # setup + 1 round
+            t1 = time.perf_counter()
+            r = run_scenario(make(1 + rounds))  # setup + 1+R rounds
+            t2 = time.perf_counter()
+            if backend == "serial":
+                serial_loss = r.loss
+            per_round = ((t2 - t1) - (t1 - t0)) / rounds
+            if per_round <= 0:
+                # timing noise swamped the differential (possible on a
+                # loaded CI host): fall back to the conservative
+                # whole-run upper bound rather than emitting a bogus
+                # near-zero figure
+                per_round = (t2 - t1) / (1 + rounds)
+            per[backend] = {
+                "s_per_round": per_round,
+                "max_abs_loss_diff_vs_serial": float(
+                    np.abs(r.loss - serial_loss).max()),
+            }
+        base = per["serial"]["s_per_round"]
+        for backend in backends:
+            per[backend]["speedup_vs_serial"] = (
+                base / max(per[backend]["s_per_round"], 1e-12))
+        out[f"cohort{K}"] = per
+    out["config"] = {"cohorts": cohorts, "rounds": rounds,
+                     "tau": 5, "backends": backends}
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)

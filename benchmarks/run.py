@@ -59,6 +59,7 @@ def experiment_specs():
         ("exp7_stragglers_extension", E.exp7_stragglers),
         ("exp8_tau_sweep_extension", E.exp8_tau_sweep),
         ("exp9_async_vs_sync_fedast", E.exp9_async_vs_sync),
+        ("exp10_backend_scaling", E.exp10_backend_scaling),
     ]
 
 
@@ -77,6 +78,13 @@ def main():
                          "microbench only (alias for --only exp9)")
     ap.add_argument("--json-out", default=None,
                     help="also write the rows as JSON (CI artifact)")
+    ap.add_argument("--sweep", default=None, metavar="SPEC_JSON",
+                    help="ScenarioSpec JSON file: run a grid sweep over "
+                         "it (see --grid) instead of the experiments")
+    ap.add_argument("--grid", default=None, metavar="GRID",
+                    help="sweep grid: JSON object of dotted-path -> "
+                         "value list (inline or @file), e.g. "
+                         "'{\"runtime.backend\": [\"serial\", \"vmap\"]}'")
     args = ap.parse_args()
     fast = not args.full
     rows = []
@@ -86,13 +94,34 @@ def main():
             print(name)
         return
 
+    if args.sweep:
+        from repro.api import ScenarioSpec, sweep_scenarios
+
+        grid_text = args.grid or "{}"
+        if grid_text.startswith("@"):
+            with open(grid_text[1:]) as f:
+                grid_text = f.read()
+        merged = sweep_scenarios(ScenarioSpec.load(args.sweep),
+                                 json.loads(grid_text), verbose=True)
+        out = args.json_out or "BENCH_sweep.json"
+        with open(out, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+        print(f"# sweep: {len(merged['runs'])} runs -> {out}",
+              file=sys.stderr)
+        return
+
     if not args.skip_experiments:
         specs = experiment_specs()
         only = args.only or ("exp9" if args.smoke else None)
         if only:
             exact = [(n, f) for n, f in specs if n == only]
-            matched = exact or [(n, f) for n, f in specs
-                                if n.startswith(only)]
+            # token-boundary prefix first, so --only exp1 stays unique
+            # now that exp10 exists
+            matched = (exact
+                       or [(n, f) for n, f in specs
+                           if n.startswith(only + "_")]
+                       or [(n, f) for n, f in specs
+                           if n.startswith(only)])
             if not matched:
                 sys.exit(f"--only {only!r} matches no experiment; "
                          "see --list")

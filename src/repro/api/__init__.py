@@ -10,7 +10,9 @@
 FedAST-style engine behind the same ``Engine`` protocol; extension points
 are string-keyed registries (``@register_allocator``,
 ``@register_arrival_process``, ``@register_auction``,
-``@register_task_family``).
+``@register_task_family``, ``@register_backend``). Cohort execution —
+HOW a cohort of client updates runs (serial / vmap / sharded) — is itself
+a registry axis: see ``repro.api.backend`` and ``RuntimeSpec.backend``.
 """
 
 from __future__ import annotations
@@ -19,11 +21,23 @@ from repro.api.registry import (  # noqa: F401
     ALLOCATORS,
     ARRIVAL_PROCESSES,
     AUCTIONS,
+    BACKENDS,
     Registry,
     register_allocator,
     register_arrival_process,
     register_auction,
+    register_backend,
     register_task_family,
+)
+from repro.api.backend import (  # noqa: F401
+    ClientBatch,
+    CohortResult,
+    CohortTask,
+    ExecutionBackend,
+    SerialBackend,
+    ShardedBackend,
+    VmapBackend,
+    get_backend,
 )
 from repro.api.arrivals import (  # noqa: F401
     AlwaysOn,
@@ -57,6 +71,8 @@ _ENGINE_EXPORTS = (
     "TASK_FAMILIES",
 )
 
+_SWEEP_EXPORTS = ("sweep_scenarios", "apply_override")
+
 
 def __getattr__(name: str):
     # engine pulls in repro.fed (jax-heavy, and repro.fed imports this
@@ -65,8 +81,12 @@ def __getattr__(name: str):
         from repro.api import engine
 
         return getattr(engine, name)
+    if name in _SWEEP_EXPORTS:
+        from repro.api import sweep
+
+        return getattr(sweep, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def __dir__():
-    return sorted(list(globals()) + list(_ENGINE_EXPORTS))
+    return sorted(list(globals()) + list(_ENGINE_EXPORTS) + list(_SWEEP_EXPORTS))

@@ -20,10 +20,12 @@ from typing import Any, Dict, List, Optional, Protocol
 
 import numpy as np
 
+from repro.api.backend import ClientBatch, CohortTask, get_backend
 from repro.api.registry import (
     ALLOCATORS,
     ARRIVAL_PROCESSES,
     AUCTIONS,
+    BACKENDS,
     TASK_FAMILIES,
     register_task_family,
 )
@@ -212,6 +214,7 @@ def _train_config(spec: ScenarioSpec) -> TrainConfig:
         dropout_prob=pop.dropout_prob,
         deep_for=tuple(rt.deep_for),
         deep_depth=rt.deep_depth,
+        backend=rt.backend,
     )
 
 
@@ -230,6 +233,7 @@ def _async_config(spec: ScenarioSpec) -> AsyncConfig:
         arrival_process=pop.arrival_process,
         arrival_options=dict(pop.arrival_options),
         max_staleness=rt.max_staleness,
+        backend=rt.backend,
         tau=rt.tau,
         lr=rt.lr,
         batch_size=rt.batch_size,
@@ -390,23 +394,36 @@ class ArchFamily:
             a.work = ts.work
             adapters.append(a)
         engine = AsyncMMFLEngine(adapters, _async_config(spec), eligibility)
-        return AsyncEngineRunner(spec, engine, has_acc=False)
+        # ArchAsyncTask defines accuracy(): the history carries a real
+        # next-token accuracy curve, so fairness unifies with synthetic
+        return AsyncEngineRunner(spec, engine, has_acc=True)
 
 
 class ArchSyncEngine:
     """The production sync round loop (formerly inlined in
-    ``launch/train.py``): MMFLCoordinator allocation -> per-arch train
-    step -> loss report, with full-state checkpoint/resume (params, opt,
-    coordinator round/RNG — so post-resume allocations match an
-    uninterrupted run)."""
+    ``launch/train.py``): MMFLCoordinator allocation -> per-arch cohort
+    dispatch through the ExecutionBackend API -> loss/accuracy report,
+    with full-state checkpoint/resume (params, opt, coordinator round/RNG
+    — so post-resume allocations match an uninterrupted run).
+
+    tau>1 tasks run TRUE FedAvg: each cohort row's tau local SGD steps
+    execute via ``backend.run_cohort`` and aggregate via
+    ``backend.aggregate`` (the Pallas fedavg path on compiled platforms).
+    tau<=1 tasks are the fused weighted-gradient server step — dispatched
+    as a degenerate single-unit cohort so every engine shares one
+    execution seam.
+    """
 
     def __init__(self, spec: ScenarioSpec, tasks, data, eligibility=None):
         from repro.core.mmfl import MMFLCoordinator
+        from repro.launch.train import make_arch_eval
 
         self.spec = spec
         self.tasks = tasks
         self.data = data
         self.names = [t.name for t in spec.tasks]
+        self.backend = get_backend(spec.runtime.backend)
+        self._eval_acc = {a: make_arch_eval(tasks[a], data[a])[1] for a in self.names}
         self.coord = MMFLCoordinator(
             task_names=self.names,
             n_clients=spec.clients.n_clients,
@@ -417,12 +434,48 @@ class ArchSyncEngine:
             eligibility=eligibility,
         )
 
-    def run(self, verbose: bool = False) -> RunResult:
+    def _acc_of(self, name: str) -> float:
+        """Current next-token eval accuracy of one task's global params."""
+        return float(self._eval_acc[name](self.tasks[name]["params"]))
+
+    def _run_task_round(self, name: str, ids, rng):
+        """One task's round: cohort execution + aggregation through the
+        pluggable backend. Returns the reported loss."""
+        import jax
+        import jax.numpy as jnp
+
         from repro.launch.train import assemble_batch
 
+        t = self.tasks[name]
+        w = self.coord.client_weights(ids)
+        batch = assemble_batch(t, self.data[name], ids, w, rng)
+        if t["tau"] <= 1:
+            # fused server step as a SINGLE-unit cohort (state = params+opt;
+            # the p_k weighting lives inside the batch's client_weights)
+            job = ClientBatch(ids[:1], None, (jax.tree.map(lambda v: v[None], batch),))
+            state = CohortTask(name, (t["params"], t["opt"]), t["opt_local_fn"])
+            res = self.backend.run_cohort(state, job)
+            t["params"], t["opt"] = jax.tree.map(lambda leaf: leaf[0], res.updates)
+            return float(res.losses[0])
+        # TRUE FedAvg: one cohort row per batch row (clients tiled to the
+        # task batch size, as assemble_batch lays them out)
+        w_rows = batch["client_weights"]
+        rows = {k: v[:, None] for k, v in batch.items() if k != "client_weights"}
+        reps = int(np.ceil(len(w_rows) / max(len(ids), 1)))
+        row_ids = np.tile(np.asarray(ids), reps)[: len(w_rows)]
+        res = self.backend.run_cohort(
+            CohortTask(name, t["params"], t["local_fn"]),
+            ClientBatch(row_ids, None, (rows,)),
+        )
+        t["params"] = self.backend.aggregate(
+            res.updates, w_rows, normalizer=jnp.maximum(w_rows.sum(), 1e-9)
+        )
+        return float(res.losses.mean())
+
+    def run(self, verbose: bool = False) -> RunResult:
         spec, rt = self.spec, self.spec.runtime
         rng = np.random.default_rng(spec.seed)
-        loss_hist, count_hist, alloc_hist = [], [], []
+        loss_hist, count_hist, alloc_hist, acc_hist = [], [], [], []
 
         ckpt, start_round = None, 0
         if rt.checkpoint_dir:
@@ -448,6 +501,11 @@ class ArchSyncEngine:
                     count_hist = [list(x) for x in hist.get("counts", [])]
                     alloc_hist = [np.asarray(x, np.int64)
                                   for x in hist.get("alloc", [])]
+                    # pre-backend checkpoints carry no accuracy curve;
+                    # only restore when it covers the restored rounds
+                    acc_hist = [list(x) for x in hist.get("acc", [])]
+                    if len(acc_hist) != len(loss_hist):
+                        acc_hist = []
                 else:                      # legacy pre-PR2 payload
                     self.coord.load_state(coord_state)
                 start_round = step
@@ -464,15 +522,13 @@ class ArchSyncEngine:
                     line.append(f"{a}: -")
                     continue
                 row[ids] = s
-                t = self.tasks[a]
-                w = self.coord.client_weights(ids)
-                batch = assemble_batch(t, self.data[a], ids, w, rng)
-                loss, t["params"], t["opt"] = t["step"](t["params"], t["opt"], batch)
-                self.coord.report(a, float(loss))
-                line.append(f"{a}: {float(loss):.3f} ({len(ids)}c)")
+                loss = self._run_task_round(a, ids, rng)
+                self.coord.report(a, loss)
+                line.append(f"{a}: {loss:.3f} ({len(ids)}c)")
             loss_hist.append([self.coord.tasks[a].loss for a in self.names])
             count_hist.append([len(alloc[a]) for a in self.names])
             alloc_hist.append(row)
+            acc_hist.append([self._acc_of(a) for a in self.names])
             if verbose:
                 print(f"round {r + 1:3d} [{time.time() - t0:5.1f}s] " + " | ".join(line))
             if ckpt and (r + 1) % rt.checkpoint_every == 0:
@@ -492,17 +548,23 @@ class ArchSyncEngine:
                             "loss": [list(x) for x in loss_hist],
                             "counts": [list(x) for x in count_hist],
                             "alloc": [np.asarray(x).tolist() for x in alloc_hist],
+                            "acc": [list(x) for x in acc_hist],
                         },
                     },
                 )
 
         counts = np.array(count_hist, np.int64).reshape(-1, len(self.names))
+        # resumed runs from pre-accuracy checkpoints have a partial curve;
+        # report accuracy only when it covers every round
+        acc = None
+        if len(acc_hist) == len(loss_hist):
+            acc = np.array(acc_hist).reshape(-1, len(self.names))
         return RunResult(
             scenario=spec.name,
             mode="sync",
             task_names=self.names,
             loss=np.array(loss_hist),
-            acc=None,
+            acc=acc,
             arrivals=counts.sum(axis=0),
             alloc_counts=counts,
             alloc=np.array(alloc_hist),
@@ -528,6 +590,7 @@ def run_scenario(spec: ScenarioSpec, verbose: bool = False) -> RunResult:
     family = TASK_FAMILIES.get(spec.family)()
     ALLOCATORS.get(spec.allocation.strategy)
     ARRIVAL_PROCESSES.get(spec.clients.arrival_process)
+    BACKENDS.get(spec.runtime.backend)
     auction_summary = None
     eligibility = None
     if spec.auction is not None:

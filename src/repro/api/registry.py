@@ -63,8 +63,10 @@ ALLOCATORS = Registry("allocator")
 ARRIVAL_PROCESSES = Registry("arrival_process")
 AUCTIONS = Registry("auction")
 TASK_FAMILIES = Registry("task_family")
+BACKENDS = Registry("backend")
 
 register_allocator = ALLOCATORS.register
 register_arrival_process = ARRIVAL_PROCESSES.register
 register_auction = AUCTIONS.register
 register_task_family = TASK_FAMILIES.register
+register_backend = BACKENDS.register

@@ -90,6 +90,10 @@ class RuntimeSpec:
     spec omitting a field reproduces the pre-API drivers exactly."""
 
     mode: str = "sync"
+    # cohort execution backend (BACKENDS registry key: serial | vmap |
+    # sharded | registered). "serial" is the bit-exact reference; validated
+    # at run_scenario time so specs can be authored before a plugin import.
+    backend: str = "serial"
     # shared local-training knobs
     rounds: int = 100
     tau: int = 5

@@ -1,0 +1,89 @@
+"""Grid sweeps over ScenarioSpecs: one call, one merged RunResult JSON.
+
+A sweep is a base spec plus a grid of dotted-path overrides — e.g.
+``{"runtime.backend": ["serial", "vmap"], "allocation.strategy":
+["fedfair", "random"]}`` runs the 2x2 cartesian product through
+``run_scenario`` and merges every ``RunResult.to_json()`` into one
+payload, so backend x allocation (or any other axis product) comparisons
+are a single call instead of driver plumbing:
+
+    from repro.api import sweep_scenarios
+    merged = sweep_scenarios(base, {"runtime.backend": ["serial", "vmap"]})
+
+CLI: ``python -m benchmarks.run --sweep spec.json --grid grid.json``.
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+from itertools import product
+from typing import Any, Dict, List, Sequence
+
+from repro.api.spec import ScenarioSpec
+
+
+def apply_override(spec: ScenarioSpec, path: str, value: Any) -> None:
+    """Set a dotted-path field on a spec tree (``runtime.backend``,
+    ``allocation.alpha``, ``seed``, ...), failing fast on unknown paths."""
+    obj: Any = spec
+    parts = path.split(".")
+    for p in parts[:-1]:
+        if not hasattr(obj, p):
+            msg = f"sweep override {path!r}: {type(obj).__name__} has no field {p!r}"
+            raise AttributeError(msg)
+        obj = getattr(obj, p)
+    leaf = parts[-1]
+    if not hasattr(obj, leaf):
+        msg = f"sweep override {path!r}: {type(obj).__name__} has no field {leaf!r}"
+        raise AttributeError(msg)
+    setattr(obj, leaf, value)
+
+
+def sweep_scenarios(
+    base_spec: ScenarioSpec, grid: Dict[str, Sequence[Any]], verbose: bool = False
+) -> Dict[str, Any]:
+    """Run the cartesian product of ``grid`` overrides on ``base_spec``.
+
+    Returns a JSON-native merged payload::
+
+        {"base": <base spec dict>,
+         "grid": {path: [values...]},
+         "runs": [{"name": ..., "overrides": {path: value},
+                   "wall_time": ..., "result": RunResult.to_json()}]}
+
+    Every point re-runs ``run_scenario`` on a deep copy of the base spec,
+    so points are independent and the base spec is never mutated.
+    """
+    from repro.api.engine import run_scenario
+
+    axes = sorted(grid)
+    for path, values in grid.items():
+        if not isinstance(values, (list, tuple)):
+            msg = f"grid[{path!r}] must be a list of values, got {type(values).__name__}"
+            raise TypeError(msg)
+    runs: List[Dict[str, Any]] = []
+    for combo in product(*(grid[a] for a in axes)):
+        spec = copy.deepcopy(base_spec)
+        overrides = dict(zip(axes, combo))
+        for path, value in overrides.items():
+            apply_override(spec, path, value)
+        tag = "-".join(f"{p.rsplit('.', 1)[-1]}={v}" for p, v in overrides.items())
+        spec.name = f"{base_spec.name}/{tag}" if tag else base_spec.name
+        if verbose:
+            print(f"sweep: {spec.name}")
+        t0 = time.time()
+        result = run_scenario(spec, verbose=verbose)
+        runs.append(
+            {
+                "name": spec.name,
+                "overrides": overrides,
+                "wall_time": time.time() - t0,
+                "result": result.to_json(),
+            }
+        )
+    return {
+        "base": base_spec.to_dict(),
+        "grid": {a: list(grid[a]) for a in axes},
+        "runs": runs,
+    }

@@ -19,10 +19,11 @@ removes the barrier:
 
 Compute is lazy and batched: jobs carry only (client, task, version);
 the actual local training runs at flush time, grouped by dispatch version
-into ONE ``fed.trainer.cohort_update`` call per group — the same compiled
-entry point the sync driver uses. With equal client speeds and
-buffer_size == cohort size the engine reproduces the sync trainer's
-round exactly (tested to 1e-6).
+into ONE ``ExecutionBackend.run_cohort`` dispatch per group — the same
+pluggable backend (serial / vmap / sharded, ``api.backend``) the sync
+driver uses, over the same fold_in-keyed one-client update rule. With
+equal client speeds and buffer_size == cohort size the engine reproduces
+the sync trainer's round exactly (tested to 1e-6).
 
 Tasks are pluggable via the ``AsyncTask`` adapter protocol, so the same
 engine drives the synthetic FedTask MLPs here and the multi-architecture
@@ -39,12 +40,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.arrivals import get_arrival_process
+from repro.api.backend import ClientBatch, CohortTask, get_backend
 from repro.core.allocation import AllocationStrategy
 from repro.core.mmfl import MMFLCoordinator
 from repro.fed.client import accuracy
 from repro.fed.data import FedTask
-from repro.fed.server import aggregate_stale
-from repro.fed.trainer import cohort_update, init_task_model, task_round_key
+from repro.fed.server import staleness_weights
+from repro.fed.trainer import (cohort_update, fed_client_batch,
+                               fed_local_fn, init_task_model,
+                               task_round_key)
 
 
 @dataclass
@@ -65,6 +69,8 @@ class AsyncConfig:
     arrival_process: str = "always_on"
     arrival_options: dict = field(default_factory=dict)
     max_staleness: Optional[int] = None   # drop updates staler than this
+    # cohort execution backend (api.backend BACKENDS key or instance)
+    backend: str = "serial"
     # local training (mirrors sync TrainConfig)
     tau: int = 5
     lr: float = 0.1
@@ -98,21 +104,46 @@ def client_speeds(profile: str, n: int, rng: np.random.Generator,
 class AsyncTask:
     """Adapter protocol the engine drives. Implementations wrap either the
     synthetic FedTask MLPs (``FedAsyncTask``) or arbitrary per-arch train
-    steps (see launch/train.py)."""
+    steps (see launch/train.py).
+
+    Cohort execution is delegated to the pluggable ExecutionBackend
+    (``api.backend``): an adapter exposes its ONE-client update rule as
+    ``local_fn`` plus the stacked per-client inputs via ``client_batch``;
+    the engine never runs a private per-client loop. A legacy adapter
+    that leaves ``local_fn`` as None and overrides only ``update()``
+    (the pre-backend protocol) still works — the engine falls back to
+    ``update()`` for it, outside backend dispatch. Adapters may also
+    define ``accuracy(params) -> float`` — when every task does, the
+    history carries an eval-accuracy curve (so ``fairness_report`` unifies
+    across task families).
+    """
 
     name: str
     n_clients: int
     p_k: np.ndarray          # (K,) base aggregation weights
     work: float = 1.0        # virtual-time cost of one local job
+    local_fn = None          # (params, key, *client_data) -> (update, loss)
 
     def init(self, seed: int):
         raise NotImplementedError
 
-    def update(self, params, seed: int, version: int, client_ids):
-        """Cohort pytree (leading axis len(client_ids)) of local updates
-        from ``params``; must be a function of (seed, version, client_ids)
-        only, so sync and async drivers agree."""
+    def client_batch(self, seed: int, version: int,
+                     client_ids) -> ClientBatch:
+        """Stacked inputs for ``local_fn`` over the given clients; must be
+        a function of (seed, version, client_ids) only, so sync and async
+        drivers — and every backend — agree."""
         raise NotImplementedError
+
+    def update(self, params, seed: int, version: int, client_ids):
+        """Convenience reference cohort (leading axis len(client_ids)):
+        ``local_fn`` applied per client via the serial backend."""
+        if self.local_fn is None:
+            raise NotImplementedError(
+                "AsyncTask adapters define local_fn + client_batch "
+                "(ExecutionBackend protocol) or override update()")
+        return get_backend("serial").run_cohort(
+            CohortTask(self.name, params, self.local_fn),
+            self.client_batch(seed, version, client_ids)).updates
 
     def evaluate(self, params) -> float:
         """Prevailing f_s for Eq. 4 (lower is better; the paper uses
@@ -121,8 +152,8 @@ class AsyncTask:
 
 
 class FedAsyncTask(AsyncTask):
-    """FedTask (synthetic MLP) adapter — reuses the sync trainer's compiled
-    cohort-update entry point and key derivation verbatim."""
+    """FedTask (synthetic MLP) adapter — reuses the sync trainer's
+    one-client update rule and key derivation verbatim."""
 
     def __init__(self, task: FedTask, task_idx: int, cfg: AsyncConfig):
         self.task = task
@@ -132,6 +163,7 @@ class FedAsyncTask(AsyncTask):
         self.n_clients = task.n_clients
         self.p_k = task.p_k
         self.work = 1.0
+        self.local_fn = fed_local_fn(cfg.tau, cfg.lr, cfg.batch_size)
 
     def init(self, seed: int):
         return init_task_model(
@@ -139,6 +171,12 @@ class FedAsyncTask(AsyncTask):
             jax.random.fold_in(jax.random.PRNGKey(seed), self.task_idx),
             self.cfg.hidden, self.cfg.depth, self.cfg.deep_for,
             self.cfg.deep_depth)
+
+    def client_batch(self, seed: int, version: int,
+                     client_ids) -> ClientBatch:
+        return fed_client_batch(
+            self.task, task_round_key(seed, self.task_idx, version),
+            client_ids)
 
     def update(self, params, seed: int, version: int, client_ids):
         return cohort_update(params, task_round_key(seed, self.task_idx,
@@ -162,12 +200,16 @@ class AsyncHistory:
     versions: np.ndarray        # (S,) final model versions
     assignments: List[Tuple[int, int]]  # (client, task) dispatch log
     dropped: int = 0            # updates discarded for exceeding staleness
-    acc: np.ndarray = field(init=False)       # 1 - f_s (fed tasks)
+    # (F, S) measured eval accuracy, when every task defines accuracy()
+    # (arch families); fed tasks keep the legacy 1 - f_s derivation
+    acc_eval: Optional[np.ndarray] = None
+    acc: np.ndarray = field(init=False)
     min_acc: np.ndarray = field(init=False)
     var_acc: np.ndarray = field(init=False)
 
     def __post_init__(self):
-        self.acc = 1.0 - self.metric
+        self.acc = (self.acc_eval if self.acc_eval is not None
+                    else 1.0 - self.metric)
         self.min_acc = self.acc.min(axis=1)
         self.var_acc = self.acc.var(axis=1)
 
@@ -206,6 +248,8 @@ class AsyncMMFLEngine:
         self.arrival = get_arrival_process(cfg.arrival_process,
                                            cfg.arrival_options)
         self.arrival.reset(self.K, np.random.default_rng(cfg.seed + 2))
+        self.backend = get_backend(cfg.backend)
+        self._has_acc = all(hasattr(t, "accuracy") for t in self.tasks)
 
     @classmethod
     def from_fed_tasks(cls, tasks: Sequence[FedTask], cfg: AsyncConfig,
@@ -255,7 +299,8 @@ class AsyncMMFLEngine:
             else:
                 kept.append(j)
         if kept:
-            # one compiled cohort call per distinct dispatch version
+            # one backend cohort dispatch per distinct dispatch version
+            task = self.tasks[s]
             deltas, weights, stale = [], [], []
             by_version: Dict[int, List[_Job]] = {}
             for j in kept:
@@ -264,22 +309,38 @@ class AsyncMMFLEngine:
                 group = by_version[v]
                 ids = np.array([j.client for j in group], np.int64)
                 base = self._retained[s][v][0]
-                cohort = self.tasks[s].update(base, cfg.seed, v, ids)
+                if task.local_fn is None:
+                    # legacy adapter (pre-backend protocol): only
+                    # update() is defined — honour it, without backend
+                    # dispatch
+                    cohort = task.update(base, cfg.seed, v, ids)
+                else:
+                    cohort = self.backend.run_cohort(
+                        CohortTask(task.name, base, task.local_fn),
+                        task.client_batch(cfg.seed, v, ids)).updates
                 for i, j in enumerate(group):
                     deltas.append(jax.tree.map(
                         lambda c, b: c[i] - b, cohort, base))
-                    weights.append(self.tasks[s].p_k[j.client])
+                    weights.append(task.p_k[j.client])
                     stale.append(cur - v)
                     self._release(s, v)
             stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
                                    *deltas)
-            agg = aggregate_stale(stacked, np.asarray(weights, np.float32),
-                                  np.asarray(stale, np.float32), cfg.beta)
+            # FedAST staleness discount on the weights, normalised by the
+            # UNDISCOUNTED sum (fed.server.aggregate_stale semantics),
+            # with the weighted sum dispatched through the backend
+            w = jnp.asarray(np.asarray(weights, np.float32))
+            disc = staleness_weights(w, np.asarray(stale, np.float32),
+                                     cfg.beta)
+            agg = self.backend.aggregate(stacked, disc, normalizer=w.sum())
             self._params[s] = jax.tree.map(
                 lambda p, d: p + cfg.server_lr * d, self._params[s], agg)
             self._version[s] = cur + 1
-            self._metric[s] = self.tasks[s].evaluate(self._params[s])
-            self.coord.report(self.tasks[s].name, self._metric[s])
+            self._metric[s] = task.evaluate(self._params[s])
+            self.coord.report(task.name, self._metric[s])
+            if self._has_acc:
+                self._acc[s] = float(task.accuracy(self._params[s]))
+                self._hist_acc.append(self._acc.copy())
             self._hist_time.append(t)
             self._hist_task.append(s)
             self._hist_metric.append(self._metric.copy())
@@ -303,6 +364,10 @@ class AsyncMMFLEngine:
         self._assignments: List[Tuple[int, int]] = []
         self._hist_time, self._hist_task = [], []
         self._hist_metric, self._hist_stale = [], []
+        self._hist_acc: List[np.ndarray] = []
+        self._acc = (np.array([float(t.accuracy(p)) for t, p in
+                               zip(self.tasks, self._params)])
+                     if self._has_acc else None)
         arrivals = np.zeros(self.S, np.int64)
         per_client = np.zeros(self.K, np.int64)
 
@@ -332,4 +397,6 @@ class AsyncMMFLEngine:
             staleness_mean=np.array(self._hist_stale),
             arrivals=arrivals, updates_per_client=per_client,
             versions=np.array(self._version, np.int64),
-            assignments=self._assignments, dropped=self._dropped)
+            assignments=self._assignments, dropped=self._dropped,
+            acc_eval=(np.array(self._hist_acc).reshape(-1, self.S)
+                      if self._has_acc else None))

@@ -7,13 +7,16 @@ Per global round:
      the recruitment auction (eligibility matrix), renormalising Eq. 4 per
      client over its eligible tasks;
   3. each task's selected clients run tau local SGD steps from the task's
-     global params (one vmapped compiled call per task);
+     global params — dispatched through the pluggable ExecutionBackend
+     (``api.backend``: serial reference, one vmapped compiled call, or a
+     device-sharded cohort);
   4. the server aggregates with p_k weights and re-evaluates test accuracy,
      which feeds the next round's allocation (f_s = 1 - acc_s, as in the
      paper's experiments).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -21,11 +24,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.backend import ClientBatch, CohortTask, get_backend
 from repro.core.allocation import (AllocationStrategy,
                                    custom_or_fedfair_probs)
-from repro.fed.client import accuracy, cohort_local_update_ids, init_mlp
+from repro.fed.client import (accuracy, cohort_local_update_ids, init_mlp,
+                              local_update)
 from repro.fed.data import FedTask
-from repro.fed.server import aggregate
 
 
 def task_round_key(seed: int, task_idx: int, version: int):
@@ -59,9 +63,10 @@ def init_task_models(tasks: List[FedTask], key, hidden: int, depth: int,
 
 def cohort_update(global_params, key, task: FedTask, client_ids,
                   tau: int, lr, batch_size: int):
-    """Run tau local steps for the given clients of one task — the single
-    compiled call both the sync round loop and the async event engine go
-    through. Returns a cohort pytree with leading axis len(client_ids).
+    """Run tau local steps for the given clients of one task in ONE
+    compiled call (library entry point; tests and examples use it as the
+    reference cohort). Returns a cohort pytree with leading axis
+    len(client_ids).
 
     client_ids is padded to the next power of two (repeating the last id)
     so XLA compiles at most log2(K)+1 cohort shapes per task instead of
@@ -78,6 +83,36 @@ def cohort_update(global_params, key, task: FedTask, client_ids,
         jnp.asarray(task.train_y), jnp.asarray(task.train_w),
         jnp.asarray(ids), tau, lr, batch_size)
     return jax.tree.map(lambda leaf: leaf[:n], cohort)
+
+
+@functools.lru_cache(maxsize=None)
+def fed_local_fn(tau: int, lr: float, batch_size: int):
+    """The ONE-client update rule behind the ExecutionBackend API: tau
+    local SGD steps (``fed.client.local_update``) returning
+    ``(updated_params, loss)``. lru_cached so every trainer/adapter with
+    the same hyper-parameters shares one function object — backends key
+    their jit caches on it, so compilations survive engine reconstruction
+    (sweeps, benchmarks)."""
+
+    def local_fn(params, key, x, y, w):
+        return local_update(params, key, x, y, w, tau, lr,
+                            batch_size), jnp.zeros(())
+
+    return local_fn
+
+
+def fed_client_batch(task: FedTask, key, client_ids) -> ClientBatch:
+    """Stacked per-client inputs for a FedTask cohort. Per-client keys are
+    ``fold_in(round_key, client_id)`` — the property that makes a client's
+    update independent of which other clients share the cohort, so every
+    backend (and the sync/async drivers) computes identical results."""
+    ids = np.asarray(client_ids, np.int32)
+    keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(jnp.asarray(ids))
+    return ClientBatch(
+        client_ids=ids,
+        keys=keys,
+        data=(jnp.asarray(task.train_x[ids]), jnp.asarray(task.train_y[ids]),
+              jnp.asarray(task.train_w[ids])))
 
 
 @dataclass
@@ -100,6 +135,8 @@ class TrainConfig:
     # "bigger model for the harder task" (paper uses a ResNet for CIFAR):
     deep_for: tuple = ("synth-cifar",)
     deep_depth: int = 3
+    # cohort execution backend (api.backend BACKENDS key or instance)
+    backend: str = "serial"
 
 
 @dataclass
@@ -127,6 +164,8 @@ class MMFLTrainer:
         # winners). Default: everyone trains everything (Section III).
         self.elig = (np.ones((self.K, self.S), bool)
                      if eligibility is None else eligibility.astype(bool))
+        self.backend = get_backend(cfg.backend)
+        self._local_fn = fed_local_fn(cfg.tau, cfg.lr, cfg.batch_size)
 
     def _init_models(self, key):
         return init_task_models(self.tasks, key, self.cfg.hidden,
@@ -186,10 +225,14 @@ class MMFLTrainer:
                 sel_ids = np.where(alloc == s)[0]
                 if len(sel_ids) == 0:
                     continue
-                cohort = cohort_update(
-                    params[s], task_round_key(cfg.seed, s, r), t, sel_ids,
-                    cfg.tau, cfg.lr, cfg.batch_size)
-                params[s] = aggregate(cohort, jnp.asarray(t.p_k[sel_ids]))
+                # cohort execution + aggregation dispatch through the
+                # pluggable backend (serial == pre-backend trace bit-exact)
+                res = self.backend.run_cohort(
+                    CohortTask(t.name, params[s], self._local_fn),
+                    fed_client_batch(t, task_round_key(cfg.seed, s, r),
+                                     sel_ids))
+                params[s] = self.backend.aggregate(
+                    res.updates, jnp.asarray(t.p_k[sel_ids]))
                 accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
             acc_hist.append(accs.copy())
             alloc_hist.append(counts)

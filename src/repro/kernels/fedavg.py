@@ -28,13 +28,35 @@ def _fedavg_kernel(w_ref, x_ref, o_ref):
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
-def fedavg_pallas(stacked, weights, *, blk=DEFAULT_BLOCK, interpret=True):
+def fedavg_pallas(stacked, weights, *, blk=DEFAULT_BLOCK, interpret=None):
     """stacked: (K, N) flat cohort params; weights: (K,) normalised.
 
     Returns (N,) the weighted average (weights are used as given — callers
     normalise; see fed/server.py).
+
+    ``interpret=None`` (the default) auto-selects from the JAX platform:
+    compiled on TPU/GPU, interpreter (the Python-level oracle) on CPU —
+    so callers get the fast path wherever one exists without having to
+    thread platform knowledge through.
     """
+    stacked = jnp.asarray(stacked)
+    weights = jnp.asarray(weights)
+    if stacked.ndim != 2:
+        raise ValueError(
+            f"fedavg_pallas: stacked must be (K, N) flat cohort params, "
+            f"got shape {stacked.shape}")
+    if weights.ndim != 1 or weights.shape[0] != stacked.shape[0]:
+        raise ValueError(
+            f"fedavg_pallas: weights must be ({stacked.shape[0]},) to "
+            f"match the cohort axis of stacked {stacked.shape}, got "
+            f"{weights.shape}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _fedavg_jit(stacked, weights, blk=blk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def _fedavg_jit(stacked, weights, *, blk, interpret):
     K, N = stacked.shape
     blk = min(blk, N)
     pad = (-N) % blk

@@ -33,9 +33,9 @@ def ssd_scan(x, a, b, c, *, chunk=128):
 
 
 def fedavg_aggregate(stacked, weights, *, blk=2048):
-    """Weighted client-parameter aggregation (MMFL server, Alg. 1 l.12)."""
-    return fedavg_pallas(stacked, weights, blk=blk,
-                         interpret=not _on_tpu())
+    """Weighted client-parameter aggregation (MMFL server, Alg. 1 l.12).
+    Interpret mode auto-selects from the platform (see fedavg_pallas)."""
+    return fedavg_pallas(stacked, weights, blk=blk)
 
 
 def rmsnorm(x, w, *, eps=1e-6):

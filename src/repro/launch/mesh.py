@@ -30,6 +30,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return Mesh(np.array(devs[:n]).reshape(shape), axes)
 
 
+def make_cohort_mesh(n_devices=None):
+    """1-D mesh over the host's devices, axis ``"clients"`` — the cohort
+    data-parallel axis the ``sharded`` execution backend shards client
+    updates across (each device runs a slice of the cohort's local
+    updates; aggregation reduces over the axis). Uses every available
+    device by default."""
+    import jax
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else max(1, min(n_devices,
+                                                       len(devs)))
+    return Mesh(np.array(devs[:n]), ("clients",))
+
+
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for unit tests (requires enough host devices)."""
     import jax

@@ -19,6 +19,7 @@ Examples (CPU):
 from __future__ import annotations
 
 import argparse
+import functools
 import zlib
 
 import jax
@@ -49,6 +50,143 @@ def make_dataset(key, cfg, n_clients, shards_per_client, seq, seed=0):
     return np.stack(data)           # (K, shards, seq)
 
 
+def arch_features(cfg, toks):
+    """Model-input dict from token rows, handling the vlm/audio extras.
+    Works on any leading batch shape (the arch adapters vmap it per
+    cohort row)."""
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.arch_type == "vlm":
+        seq = toks.shape[-1]
+        batch["img_embeds"] = jnp.zeros(
+            toks.shape[:-1] + (cfg.n_img_tokens, cfg.d_model))
+        batch["tokens"] = toks[..., : seq - cfg.n_img_tokens]
+        batch["labels"] = toks[..., : seq - cfg.n_img_tokens]
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.zeros(
+            toks.shape[:-1] + (cfg.enc_frames, cfg.d_model))
+    return batch
+
+
+@functools.lru_cache(maxsize=None)
+def arch_local_fn(api, cfg, tau: int, local_lr: float):
+    """ONE cohort row's local FedAvg work for an arch task: tau SGD steps
+    on the row's batch from the global params — the ``local_fn`` the
+    ExecutionBackend API executes serially, vmapped, or sharded. Returns
+    (updated_params, mean local loss); deterministic given the batch (the
+    PRNG key slot is unused).
+
+    lru_cached on the (hashable, frozen) api/cfg pair so every engine
+    built for the same architecture shares ONE function object — the
+    backends key their process-wide jit caches on it, so repeated engine
+    construction (sweeps, benchmarks) reuses compilations instead of
+    leaking a fresh jitted copy per engine."""
+
+    def local_fn(params, key, client_batch):
+        del key
+
+        def step(p, _):
+            (l, _), g = jax.value_and_grad(
+                api.loss_fn, has_aux=True)(p, cfg, client_batch)
+            p = jax.tree.map(
+                lambda pp, gg: (pp - local_lr * gg).astype(pp.dtype),
+                p, g)
+            return p, l
+
+        p, ls = jax.lax.scan(step, params, None, length=tau)
+        return p, ls.mean()
+
+    return local_fn
+
+
+_ARCH_EVAL_CACHE: dict = {}
+
+
+def make_arch_eval(task, data):
+    """Jitted eval pair for an arch task on a held-out shard: (loss,
+    next-token top-1 accuracy). Accuracy gives ArchFamily tasks a real
+    accuracy curve, so ``fairness_report`` unifies across the synthetic
+    and LM families instead of falling back to loss-only.
+
+    Cached on (cfg, eval data) — data arrays are unhashable, so the key
+    carries the bytes of the small held-out slice — for the same reason
+    the local_fns are lru_cached: repeated engine construction must reuse
+    jits, not leak fresh compiled copies."""
+    cfg, api = task["cfg"], task["api"]
+    slice_ = data[: min(8, data.shape[0]), 0]
+    key = (cfg, slice_.shape, slice_.tobytes())
+    hit = _ARCH_EVAL_CACHE.get(key)
+    if hit is not None:
+        return hit
+    n_eval = min(8, data.shape[0])
+    eval_toks = jnp.asarray(data[:n_eval, 0] % cfg.vocab_size)
+    feats = arch_features(cfg, eval_toks)
+    # next-token probe: prefill on all-but-last tokens, predict the last
+    probe = dict(feats)
+    probe["tokens"] = feats["tokens"][:, :-1]
+    probe["labels"] = feats["labels"][:, :-1]
+    target = feats["tokens"][:, -1]
+
+    @jax.jit
+    def eval_loss(params):
+        return api.loss_fn(params, cfg, feats)[0]
+
+    @jax.jit
+    def eval_acc(params):
+        logits, _ = api.prefill_fn(params, cfg, probe)
+        pred = jnp.argmax(logits[:, -1, :], axis=-1)
+        return jnp.mean((pred == target).astype(jnp.float32))
+
+    _ARCH_EVAL_CACHE[key] = (eval_loss, eval_acc)
+    return eval_loss, eval_acc
+
+
+@functools.lru_cache(maxsize=None)
+def arch_shard_local_fn(api, cfg, tau: int, local_lr: float):
+    """``arch_local_fn`` over a client's raw token shards (the async
+    adapters' unit of work): features are built inside, so the stacked
+    cohort input is just the (n, shards, seq) token array. Cached for the
+    same reason as ``arch_local_fn``."""
+    row_fn = arch_local_fn(api, cfg, tau, local_lr)
+
+    def local_fn(params, key, toks):
+        return row_fn(params, key, arch_features(cfg, toks))
+
+    return local_fn
+
+
+def server_opt():
+    """The arch tasks' server optimizer — ONE definition, consumed by both
+    ``build_task`` (opt_state init) and ``arch_fused_step`` (the update
+    rule), so the hyper-parameters cannot silently drift apart."""
+    return adamw(lr=3e-3, max_grad_norm=1.0)
+
+
+@functools.lru_cache(maxsize=None)
+def arch_fused_step(api, cfg):
+    """tau=1 local steps == weighted gradient aggregation (core/mmfl):
+    ONE fused adamw server step on the mixed p_k-weighted batch. Returns
+    (train_step, opt_local_fn) — the latter wraps the step as a
+    single-unit "cohort" (state = the (params, opt) pair) so the engine
+    dispatches it through the same ExecutionBackend seam. lru_cached like
+    ``arch_local_fn`` so engines for the same config share one jit."""
+    opt = server_opt()
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, cfg, batch)
+        new_p, new_o = opt.update(params, grads, opt_state)
+        return loss, new_p, new_o
+
+    def opt_local_fn(state, key, batch):
+        del key
+        params_, opt_ = state
+        loss, new_p, new_o = train_step(params_, opt_, batch)
+        return (new_p, new_o), loss
+
+    return train_step, opt_local_fn
+
+
 def build_task(arch: str, preset: str, seq: int, batch: int, tau: int = 1,
                local_lr: float = 5e-3):
     cfg = smoke_config(arch) if preset == "tiny" else get_config(arch)
@@ -58,50 +196,22 @@ def build_task(arch: str, preset: str, seq: int, batch: int, tau: int = 1,
     # is reproducible across processes
     params = api.init_params(
         jax.random.PRNGKey(zlib.crc32(arch.encode()) % 2**31), cfg)
-    opt = adamw(lr=3e-3, max_grad_norm=1.0)
-    opt_state = opt.init(params)
+    opt_state = server_opt().init(params)
 
     if tau <= 1:
-        @jax.jit
-        def train_step(params, opt_state, batch):
-            (loss, _), grads = jax.value_and_grad(
-                api.loss_fn, has_aux=True)(params, cfg, batch)
-            new_p, new_o = opt.update(params, grads, opt_state)
-            return loss, new_p, new_o
+        train_step, opt_local_fn = arch_fused_step(api, cfg)
     else:
-        # TRUE FedAvg: each selected client runs tau local SGD steps from
-        # the global params (vmapped cohort); the server aggregates the
-        # flattened cohort through the Pallas fedavg kernel (Alg.1 l.12).
-        from jax.flatten_util import ravel_pytree
-        from repro.kernels import fedavg_aggregate
-
-        def local_train(params, client_batch):
-            def step(p, _):
-                (l, _), g = jax.value_and_grad(
-                    api.loss_fn, has_aux=True)(p, cfg, client_batch)
-                p = jax.tree.map(
-                    lambda pp, gg: (pp - local_lr * gg).astype(pp.dtype),
-                    p, g)
-                return p, l
-            p, ls = jax.lax.scan(step, params, None, length=tau)
-            return p, ls.mean()
-
-        _, unravel = ravel_pytree(params)
-
-        @jax.jit
-        def train_step(params, opt_state, batch):
-            # batch rows are per-client shards; weights from the coord.
-            w = batch["client_weights"]
-            cb = {k: v[:, None] for k, v in batch.items()
-                  if k != "client_weights"}        # rows -> per-client batch
-            cohort, losses = jax.vmap(local_train, in_axes=(None, 0))(
-                params, cb)
-            flat = jax.vmap(lambda p: ravel_pytree(p)[0])(cohort)
-            agg = fedavg_aggregate(flat, w / jnp.maximum(w.sum(), 1e-9))
-            return losses.mean(), unravel(agg), opt_state
+        # TRUE FedAvg: each cohort row runs tau local SGD steps from the
+        # global params; execution AND Pallas-kernel aggregation dispatch
+        # through the ExecutionBackend API (the engine calls run_cohort
+        # on "local_fn" below, then backend.aggregate).
+        train_step, opt_local_fn = None, None
 
     return {"cfg": cfg, "api": api, "params": params, "opt": opt_state,
-            "step": train_step, "batch": batch, "seq": seq}
+            "step": train_step, "tau": tau,
+            "local_fn": arch_local_fn(api, cfg, max(tau, 1), local_lr),
+            "opt_local_fn": opt_local_fn,
+            "batch": batch, "seq": seq}
 
 
 def assemble_batch(task, data, client_ids, weights, rng):
@@ -130,10 +240,11 @@ def assemble_batch(task, data, client_ids, weights, rng):
 
 class ArchAsyncTask:
     """AsyncTask adapter for one architecture: tau local SGD steps on the
-    completing client's token shards, vmapped per dispatch-version group —
-    the arch-level analogue of fed.trainer.cohort_update. Lets the
-    AsyncMMFLEngine drive the multi-arch production tasks with the same
-    event queue / buffer / staleness machinery as the synthetic tasks."""
+    completing client's token shards. The one-client rule is exposed as
+    ``local_fn`` + ``client_batch``, so the AsyncMMFLEngine's flush groups
+    dispatch through the pluggable ExecutionBackend (serial / vmap /
+    sharded) exactly like the synthetic tasks — same event queue, buffers,
+    and staleness machinery."""
 
     def __init__(self, name, task_idx, task, data, tau=2, local_lr=5e-3):
         self.name = name
@@ -145,57 +256,38 @@ class ArchAsyncTask:
         self.work = 1.0
         cfg, api = task["cfg"], task["api"]
         self._cfg = cfg
-
-        def one_client(params, key, toks):
-            batch = self._features(toks)
-            del key
-
-            def step(p, _):
-                (l, _), g = jax.value_and_grad(
-                    api.loss_fn, has_aux=True)(p, cfg, batch)
-                p = jax.tree.map(
-                    lambda pp, gg: (pp - local_lr * gg).astype(pp.dtype),
-                    p, g)
-                return p, l
-
-            p, ls = jax.lax.scan(step, params, None, length=tau)
-            return p, ls.mean()
-
-        self._cohort = jax.jit(jax.vmap(one_client, in_axes=(None, 0, 0)))
-        self._eval_toks = jnp.asarray(
-            data[:, 0][: min(8, self.n_clients)] % cfg.vocab_size)
-        self._eval = jax.jit(
-            lambda p: api.loss_fn(p, cfg, self._features(self._eval_toks))[0])
-
-    def _features(self, toks):
-        cfg = self._cfg
-        batch = {"tokens": toks, "labels": toks}
-        if cfg.arch_type == "vlm":
-            seq = toks.shape[-1]
-            batch["img_embeds"] = jnp.zeros(
-                toks.shape[:-1] + (cfg.n_img_tokens, cfg.d_model))
-            batch["tokens"] = toks[..., : seq - cfg.n_img_tokens]
-            batch["labels"] = toks[..., : seq - cfg.n_img_tokens]
-        if cfg.arch_type == "audio":
-            batch["frames"] = jnp.zeros(
-                toks.shape[:-1] + (cfg.enc_frames, cfg.d_model))
-        return batch
+        # a client's "batch" is its full shard stack (shards, seq)
+        self.local_fn = arch_shard_local_fn(api, cfg, tau, local_lr)
+        self._eval, self._eval_acc = make_arch_eval(task, data)
 
     def init(self, seed):
         del seed
         return self.task["params"]
 
-    def update(self, params, seed, version, client_ids):
+    def client_batch(self, seed, version, client_ids):
+        from repro.api.backend import ClientBatch
+
         key = task_round_key(seed, self.task_idx, version)
+        ids = np.asarray(client_ids)
         keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(
-            jnp.asarray(client_ids))
-        toks = jnp.asarray(
-            self.data[np.asarray(client_ids)] % self._cfg.vocab_size)
-        cohort, _ = self._cohort(params, keys, toks)
-        return cohort
+            jnp.asarray(ids))
+        toks = jnp.asarray(self.data[ids] % self._cfg.vocab_size)
+        return ClientBatch(ids, keys, (toks,))
+
+    def update(self, params, seed, version, client_ids):
+        from repro.api.backend import CohortTask, get_backend
+
+        return get_backend("vmap").run_cohort(
+            CohortTask(self.name, params, self.local_fn),
+            self.client_batch(seed, version, client_ids)).updates
 
     def evaluate(self, params) -> float:
         return float(self._eval(params))
+
+    def accuracy(self, params) -> float:
+        """Next-token top-1 accuracy on the held-out shard (the arch
+        family's analogue of the synthetic tasks' test accuracy)."""
+        return float(self._eval_acc(params))
 
 
 def build_scenario(args) -> ScenarioSpec:
@@ -219,6 +311,7 @@ def build_scenario(args) -> ScenarioSpec:
         allocation=AllocationSpec(strategy=args.strategy, alpha=args.alpha),
         runtime=RuntimeSpec(
             mode="async" if args.async_mode else "sync",
+            backend=args.backend,
             rounds=args.rounds,
             tau=args.tau,
             total_arrivals=args.arrivals,
@@ -247,6 +340,9 @@ def main():
     ap.add_argument("--tau", type=int, default=1,
                     help=">1: true FedAvg with tau local steps per client")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="serial",
+                    help="cohort execution backend (serial | vmap | "
+                         "sharded | registered BACKENDS key)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
@@ -278,7 +374,8 @@ def main():
               f"arrival={spec.clients.arrival_process} "
               f"on {jax.device_count()} device(s)")
     else:
-        print(f"MMFL concurrent training: {names} on "
+        print(f"MMFL concurrent training: {names} "
+              f"[backend={spec.runtime.backend}] on "
               f"{jax.device_count()} device(s)")
 
     result = run_scenario(spec, verbose=True)

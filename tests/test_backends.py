@@ -1,0 +1,268 @@
+"""ExecutionBackend API: serial/vmap/sharded parity through run_scenario,
+registry error paths, fedavg kernel validation, sweep driver, arch
+accuracy curves."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    BACKENDS,
+    ClientPopulationSpec,
+    CohortTask,
+    RuntimeSpec,
+    ScenarioSpec,
+    SerialBackend,
+    TaskSpec,
+    get_backend,
+    register_backend,
+    run_scenario,
+    sweep_scenarios,
+)
+
+ALL_BACKENDS = ("serial", "vmap", "sharded")
+
+
+def two_task_spec(backend="serial", mode="sync", **runtime_kw):
+    return ScenarioSpec(
+        name="bk",
+        seed=0,
+        tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]}),
+               TaskSpec("synth-fmnist", options={"n_range": [40, 60]})],
+        clients=ClientPopulationSpec(n_clients=10, participation=1.0),
+        runtime=RuntimeSpec(mode=mode, backend=backend, **runtime_kw))
+
+
+def _assert_tree_close(a, b, atol=1e-6):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+# ----------------------------------------------------------------- registry
+
+def test_backend_registry_contents_and_unknown_key():
+    assert set(ALL_BACKENDS) <= set(BACKENDS.names())
+    with pytest.raises(KeyError, match="serial"):
+        BACKENDS.get("turbo")
+    with pytest.raises(KeyError, match="backend"):
+        get_backend("turbo")
+
+
+def test_unknown_backend_fails_fast_in_run_scenario():
+    spec = two_task_spec(rounds=1)
+    spec.runtime.backend = "turbo"
+    with pytest.raises(KeyError, match="backend"):
+        run_scenario(spec)
+
+
+def test_spec_backend_field_roundtrip_and_legacy_load():
+    spec = two_task_spec(backend="vmap", rounds=2)
+    back = ScenarioSpec.from_json(spec.to_json())
+    assert back == spec and back.runtime.backend == "vmap"
+    # pre-backend specs (no field) load unchanged and default to serial
+    legacy = {"tasks": [{"name": "synth-mnist"}],
+              "runtime": {"mode": "sync", "rounds": 1}}
+    assert ScenarioSpec.from_dict(legacy).runtime.backend == "serial"
+
+
+def test_custom_backend_registration_dispatches():
+    calls = []
+
+    @register_backend("counting")
+    class CountingBackend(SerialBackend):
+        def run_cohort(self, task_state, client_batch, rng=None):
+            calls.append(len(client_batch))
+            return super().run_cohort(task_state, client_batch, rng)
+
+    r = run_scenario(two_task_spec(backend="counting", rounds=2, tau=2))
+    assert calls and sum(calls) == int(r.arrivals.sum())
+
+
+# ------------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("backend", ["vmap", "sharded"])
+def test_sync_backend_parity_vs_serial(backend):
+    """Acceptance: every backend reproduces the serial reference ≤1e-6
+    (loss curves AND final params) through run_scenario."""
+    base = run_scenario(two_task_spec("serial", rounds=3, tau=2))
+    got = run_scenario(two_task_spec(backend, rounds=3, tau=2))
+    np.testing.assert_allclose(got.loss, base.loss, atol=1e-6)
+    np.testing.assert_allclose(got.acc, base.acc, atol=1e-6)
+    np.testing.assert_array_equal(got.alloc, base.alloc)
+    for p, q in zip(base.params, got.params):
+        _assert_tree_close(p, q)
+
+
+@pytest.mark.parametrize("backend", ["vmap", "sharded"])
+def test_async_backend_parity_vs_serial(backend):
+    kw = dict(mode="async", total_arrivals=20, buffer_size=4, tau=2)
+    base = run_scenario(two_task_spec("serial", **kw))
+    got = run_scenario(two_task_spec(backend, **kw))
+    np.testing.assert_allclose(got.loss, base.loss, atol=1e-6)
+    for p, q in zip(base.params, got.params):
+        _assert_tree_close(p, q)
+
+
+def test_serial_backend_matches_reference_cohort_bitexact():
+    """The serial backend's per-client loop is bit-exact with the library
+    cohort entry point (fold_in keying makes per-client results
+    independent of cohort batching)."""
+    from repro.fed import standard_tasks
+    from repro.fed.trainer import (cohort_update, fed_client_batch,
+                                   fed_local_fn, init_task_models,
+                                   task_round_key)
+
+    tasks = standard_tasks(["synth-mnist"], n_clients=6, seed=0,
+                           n_range=(40, 60))
+    p0 = init_task_models(tasks, jax.random.PRNGKey(0), 64, 2)[0]
+    key = task_round_key(0, 0, 0)
+    ids = np.arange(6)
+    ref = cohort_update(p0, key, tasks[0], ids, 3, 0.1, 32)
+    got = SerialBackend().run_cohort(
+        CohortTask("t", p0, fed_local_fn(3, 0.1, 32)),
+        fed_client_batch(tasks[0], key, ids)).updates
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_backend_aggregate_matches_server_aggregate():
+    from repro.fed.server import aggregate
+
+    cohort = {"w": jnp.arange(24.0).reshape(4, 3, 2)}
+    weights = jnp.asarray(np.array([0.1, 0.4, 0.2, 0.3], np.float32))
+    ref = aggregate(cohort, weights)
+    for backend in ALL_BACKENDS:
+        got = get_backend(backend).aggregate(cohort, weights)
+        _assert_tree_close(ref, got)
+
+
+def test_backend_aggregate_custom_normalizer():
+    """The async engine normalises staleness-discounted weights by the
+    UNDISCOUNTED sum — the normalizer hook must honour that."""
+    cohort = jnp.ones((3, 4))
+    out = get_backend("serial").aggregate(
+        cohort, jnp.asarray([1.0, 1.0, 1.0]), normalizer=6.0)
+    np.testing.assert_allclose(np.asarray(out), 0.5, rtol=1e-6)
+
+
+def test_legacy_update_only_async_adapter_still_runs():
+    """Back-compat: a pre-backend AsyncTask that overrides only update()
+    (local_fn stays None) must still drive the engine — the flush falls
+    back to update() instead of crashing inside backend dispatch."""
+    from repro.fed import AsyncConfig, AsyncMMFLEngine, standard_tasks
+    from repro.fed.async_engine import AsyncTask, FedAsyncTask
+    from repro.fed.trainer import cohort_update, task_round_key
+
+    tasks = standard_tasks(["synth-mnist"], n_clients=6, seed=0,
+                           n_range=(40, 60))
+    cfg = AsyncConfig(total_arrivals=6, buffer_size=3, tau=2, seed=0)
+
+    class Legacy(AsyncTask):
+        def __init__(self):
+            self.name, self.n_clients = "legacy", 6
+            self.p_k, self.work = tasks[0].p_k, 1.0
+            self._ref = FedAsyncTask(tasks[0], 0, cfg)
+
+        def init(self, seed):
+            return self._ref.init(seed)
+
+        def update(self, params, seed, version, ids):
+            return cohort_update(params, task_round_key(seed, 0, version),
+                                 tasks[0], ids, 2, 0.1, 32)
+
+        def evaluate(self, params):
+            return self._ref.evaluate(params)
+
+    modern = AsyncMMFLEngine([FedAsyncTask(tasks[0], 0, cfg)], cfg).run()
+    legacy = AsyncMMFLEngine([Legacy()], cfg).run()
+    assert len(legacy.time) == len(modern.time) > 0
+    np.testing.assert_allclose(legacy.metric, modern.metric, atol=1e-6)
+    # an adapter with neither local_fn nor update() fails with a clear
+    # message, not a jit(None) TypeError
+    bare = Legacy()
+    bare.update = AsyncTask.update.__get__(bare)
+    with pytest.raises(NotImplementedError, match="local_fn"):
+        bare.update(bare.init(0), 0, 0, np.arange(2))
+
+
+# ------------------------------------------------------------ fedavg kernel
+
+def test_fedavg_pallas_interpret_auto_selects_platform():
+    from repro.kernels.fedavg import fedavg_pallas
+
+    st = jnp.asarray(np.random.default_rng(0).normal(size=(4, 64)),
+                     jnp.float32)
+    w = jnp.asarray(np.full(4, 0.25, np.float32))
+    auto = fedavg_pallas(st, w)                # interpret resolved inside
+    ref = fedavg_pallas(st, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(ref),
+                               atol=1e-6)
+
+
+def test_fedavg_pallas_validates_shapes():
+    from repro.kernels.fedavg import fedavg_pallas
+
+    with pytest.raises(ValueError, match="stacked"):
+        fedavg_pallas(jnp.zeros((2, 3, 4)), jnp.zeros(2))
+    with pytest.raises(ValueError, match="weights"):
+        fedavg_pallas(jnp.zeros((2, 8)), jnp.zeros(3))
+    with pytest.raises(ValueError, match="weights"):
+        fedavg_pallas(jnp.zeros((2, 8)), jnp.zeros((2, 2)))
+
+
+# ------------------------------------------------------------- sweep driver
+
+def test_sweep_scenarios_backend_x_allocation_grid():
+    merged = sweep_scenarios(
+        two_task_spec(rounds=2, tau=2),
+        {"runtime.backend": ["serial", "vmap"],
+         "allocation.strategy": ["fedfair", "random"]})
+    assert len(merged["runs"]) == 4
+    json.dumps(merged)                          # JSON-native
+    combos = {(r["overrides"]["runtime.backend"],
+               r["overrides"]["allocation.strategy"])
+              for r in merged["runs"]}
+    assert combos == {("serial", "fedfair"), ("serial", "random"),
+                      ("vmap", "fedfair"), ("vmap", "random")}
+    # same-(seed, strategy) points differ only in backend => same curves
+    by = {(r["overrides"]["runtime.backend"],
+           r["overrides"]["allocation.strategy"]):
+          np.asarray(r["result"]["loss"]) for r in merged["runs"]}
+    np.testing.assert_allclose(by[("vmap", "fedfair")],
+                               by[("serial", "fedfair")], atol=1e-6)
+
+
+def test_sweep_unknown_override_path_fails_fast():
+    with pytest.raises(AttributeError, match="no field"):
+        sweep_scenarios(two_task_spec(rounds=1),
+                        {"runtime.warp_speed": [1]})
+    with pytest.raises(TypeError, match="list"):
+        sweep_scenarios(two_task_spec(rounds=1),
+                        {"runtime.backend": "serial"})
+
+
+# ------------------------------------------------------- arch accuracy curve
+
+@pytest.mark.parametrize("mode,kw", [
+    ("sync", dict(rounds=2)),
+    ("async", dict(total_arrivals=4, buffer_size=2)),
+])
+def test_arch_family_reports_accuracy_curve(mode, kw):
+    """Satellite: ArchFamily tasks carry an eval-accuracy curve, so
+    fairness_report unifies across synthetic and LM families."""
+    spec = ScenarioSpec(
+        name="arch-acc",
+        tasks=[TaskSpec("smollm-135m", family="arch",
+                        options={"preset": "tiny", "seq": 16, "batch": 2,
+                                 "tau": 1})],
+        clients=ClientPopulationSpec(n_clients=4, participation=1.0),
+        runtime=RuntimeSpec(mode=mode, **kw))
+    r = run_scenario(spec)
+    assert r.acc is not None and len(r.acc)
+    assert np.all((r.acc >= 0.0) & (r.acc <= 1.0))
+    for k in ("min_acc", "var_acc", "cosine_uniformity", "worst_task"):
+        assert k in r.fairness
