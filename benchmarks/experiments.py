@@ -18,8 +18,8 @@ import time
 import numpy as np
 
 from repro.api import (AUCTIONS, AllocationSpec, AuctionSpec,
-                       ClientPopulationSpec, RuntimeSpec, ScenarioSpec,
-                       TaskSpec, run_scenario)
+                       ClientPopulationSpec, PolicySpec, RuntimeSpec,
+                       ScenarioSpec, TaskSpec, run_scenario)
 from repro.fed import client_speeds
 
 STRATS = ["fedfair", "random", "round_robin"]
@@ -391,6 +391,75 @@ def exp10_backend_scaling(fast=True, json_path="BENCH_backends.json"):
         out[f"cohort{K}"] = per
     out["config"] = {"cohorts": cohorts, "rounds": rounds,
                      "tau": 5, "backends": backends}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out
+
+
+def exp11_policy_comparison(fast=True, seeds=(0, 1),
+                            json_path="BENCH_policies.json"):
+    """Policy-API headline: the legacy alpha-fair wrapper vs the new
+    STATEFUL policies (ucb_bandit on loss-delta rewards, grad_norm on
+    observed cohort update norms) on the 3-task difficulty scenario — the
+    SAME spec through run_scenario, differing only in ``spec.policy`` —
+    plus the one_shot vs periodic_auction incentive comparison (re-auction
+    every R rounds against the remaining budget). Writes
+    BENCH_policies.json for the CI artifact trail."""
+    n_clients = 30 if fast else 120
+    rounds = 20 if fast else 100
+    names = ["synth-mnist", "synth-cifar", "synth-fmnist"]
+    policies = {
+        "fedfair_legacy": None,
+        "random_legacy": None,          # via allocation.strategy
+        "ucb_bandit": PolicySpec("ucb_bandit", {"epsilon": 0.2}),
+        "grad_norm": PolicySpec("grad_norm"),
+    }
+    out = {}
+    for label, pol in policies.items():
+        strat = "random" if label == "random_legacy" else "fedfair"
+        mins, variances, shares = [], [], []
+        for seed in seeds:
+            spec = _scenario(names, strat, rounds, seed,
+                             n_range=(60, 90), n_clients=n_clients,
+                             participation=0.25, tau=3)
+            spec.policy = pol
+            h = run_scenario(spec)
+            mins.append(h.min_acc[-1])
+            variances.append(h.var_acc[-1])
+            tot = h.alloc_counts.sum(axis=0)
+            shares.append(tot / max(tot.sum(), 1))
+        out[label] = {
+            "min_acc": float(np.mean(mins)),
+            "var_acc": float(np.mean(variances)),
+            "client_share": np.mean(shares, axis=0).round(3).tolist(),
+        }
+    # incentive comparison: same auction mechanism + budget, one_shot vs
+    # per-round re-auctioning with the remaining budget
+    K, B = 40, 20.0
+    inc_rounds = 15 if fast else 60
+    for label, incentive, opts in (
+            ("one_shot", "one_shot", {}),
+            ("periodic_auction", "periodic_auction", {"every": 5})):
+        auction = AuctionSpec(mechanism="gmmfair", budget=B,
+                              bid_model="exp4", bid_seed=0,
+                              incentive=incentive, incentive_options=opts)
+        mins, spent, runs_ = [], [], []
+        for seed in seeds:
+            r = run_scenario(_scenario(["synth-mnist", "synth-cifar"],
+                                       "fedfair", inc_rounds, seed,
+                                       n_range=(60, 90), n_clients=K,
+                                       participation=0.6,
+                                       auction=auction))
+            mins.append(r.min_acc[-1])
+            spent.append(r.auction["total_spent"])
+            runs_.append(r.auction["auctions_run"])
+        out[f"incentive_{label}"] = {
+            "min_acc": float(np.mean(mins)),
+            "total_spent": float(np.mean(spent)),
+            "auctions_run": float(np.mean(runs_)),
+            "budget": B,
+        }
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)

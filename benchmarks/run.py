@@ -60,6 +60,7 @@ def experiment_specs():
         ("exp8_tau_sweep_extension", E.exp8_tau_sweep),
         ("exp9_async_vs_sync_fedast", E.exp9_async_vs_sync),
         ("exp10_backend_scaling", E.exp10_backend_scaling),
+        ("exp11_policy_comparison", E.exp11_policy_comparison),
     ]
 
 
@@ -85,6 +86,9 @@ def main():
                     help="sweep grid: JSON object of dotted-path -> "
                          "value list (inline or @file), e.g. "
                          "'{\"runtime.backend\": [\"serial\", \"vmap\"]}'")
+    ap.add_argument("--jobs", type=int, default=1, metavar="N",
+                    help="run --sweep grid points in N worker processes "
+                         "(deterministic grid-order results either way)")
     args = ap.parse_args()
     fast = not args.full
     rows = []
@@ -102,7 +106,8 @@ def main():
             with open(grid_text[1:]) as f:
                 grid_text = f.read()
         merged = sweep_scenarios(ScenarioSpec.load(args.sweep),
-                                 json.loads(grid_text), verbose=True)
+                                 json.loads(grid_text), verbose=True,
+                                 max_workers=args.jobs)
         out = args.json_out or "BENCH_sweep.json"
         with open(out, "w") as f:
             json.dump(merged, f, indent=2, sort_keys=True)

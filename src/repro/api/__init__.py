@@ -10,9 +10,13 @@
 FedAST-style engine behind the same ``Engine`` protocol; extension points
 are string-keyed registries (``@register_allocator``,
 ``@register_arrival_process``, ``@register_auction``,
-``@register_task_family``, ``@register_backend``). Cohort execution —
-HOW a cohort of client updates runs (serial / vmap / sharded) — is itself
-a registry axis: see ``repro.api.backend`` and ``RuntimeSpec.backend``.
+``@register_task_family``, ``@register_backend``, ``@register_policy``,
+``@register_incentive``). Cohort execution — HOW a cohort of client
+updates runs (serial / vmap / sharded) — is a registry axis
+(``repro.api.backend``, ``RuntimeSpec.backend``), and so is the paper's
+core loop itself: stateful round-by-round ``AllocationPolicy`` objects
+and per-round re-auctioning ``IncentiveMechanism`` objects
+(``repro.api.policy``, ``ScenarioSpec.policy`` / ``AuctionSpec.incentive``).
 """
 
 from __future__ import annotations
@@ -22,11 +26,15 @@ from repro.api.registry import (  # noqa: F401
     ARRIVAL_PROCESSES,
     AUCTIONS,
     BACKENDS,
+    INCENTIVES,
+    POLICIES,
     Registry,
     register_allocator,
     register_arrival_process,
     register_auction,
     register_backend,
+    register_incentive,
+    register_policy,
     register_task_family,
 )
 from repro.api.backend import (  # noqa: F401
@@ -46,10 +54,26 @@ from repro.api.arrivals import (  # noqa: F401
     PoissonParticipation,
     get_arrival_process,
 )
+from repro.api.policy import (  # noqa: F401
+    AllocationPolicy,
+    EligibilityUpdate,
+    GradNormPolicy,
+    IncentiveMechanism,
+    LegacyStrategyPolicy,
+    OneShotAuction,
+    PeriodicAuction,
+    RoundContext,
+    RoundObservation,
+    UCBBanditPolicy,
+    build_eligibility,
+    incentive_from_spec,
+    policy_from_spec,
+)
 from repro.api.spec import (  # noqa: F401
     AllocationSpec,
     AuctionSpec,
     ClientPopulationSpec,
+    PolicySpec,
     RuntimeSpec,
     ScenarioSpec,
     TaskSpec,
@@ -64,7 +88,6 @@ _ENGINE_EXPORTS = (
     "Engine",
     "RunResult",
     "run_scenario",
-    "build_eligibility",
     # the registry itself lives in repro.api.registry, but its built-in
     # entries are registered by engine.py — route access through the lazy
     # engine import so the families are always populated when looked up

@@ -21,15 +21,24 @@ from typing import Any, Dict, List, Optional, Protocol
 import numpy as np
 
 from repro.api.backend import ClientBatch, CohortTask, get_backend
+from repro.api.policy import (  # noqa: F401  (re-exported legacy names)
+    BID_MODELS,
+    RoundContext,
+    build_eligibility,
+    incentive_from_spec,
+    policy_from_spec,
+    stacked_delta_norms,
+)
 from repro.api.registry import (
     ALLOCATORS,
     ARRIVAL_PROCESSES,
-    AUCTIONS,
     BACKENDS,
+    INCENTIVES,
+    POLICIES,
     TASK_FAMILIES,
     register_task_family,
 )
-from repro.api.spec import AuctionSpec, ScenarioSpec
+from repro.api.spec import ScenarioSpec
 from repro.core.fairness import fairness_report
 from repro.fed.async_engine import AsyncConfig, AsyncMMFLEngine, FedAsyncTask
 from repro.fed.data import _RECIPES, make_synthetic_task, task_seed
@@ -145,55 +154,6 @@ class Engine(Protocol):
     def run(self, verbose: bool = False) -> RunResult: ...
 
 
-# ----------------------------------------------------------------- auction
-
-BID_MODELS = {
-    # bids ~ U(0, 1) iid per (user, task)
-    "uniform": lambda rng, n, S: rng.random((n, S)),
-}
-
-
-def _bids_exp4(rng, n, S):
-    """Experiment 4's bid model: task 1 truncated Gaussian, task 2
-    increasing-linear density on [0, 1] (2 tasks only)."""
-    if S != 2:
-        raise ValueError(f"bid model 'exp4' is defined for 2 tasks, got {S}")
-    b = np.empty((n, 2))
-    b[:, 0] = np.clip(rng.normal(0.5, 0.2, n), 0.01, 1.0)
-    b[:, 1] = np.sqrt(rng.random(n))
-    return b
-
-
-BID_MODELS["exp4"] = _bids_exp4
-
-
-def build_eligibility(auction: AuctionSpec, n_clients: int, n_tasks: int):
-    """Run the named auction; returns (eligibility (K, S) bool, result)."""
-    if auction.bids is not None:
-        bids = np.asarray(auction.bids, np.float64)
-        if bids.shape != (n_clients, n_tasks):
-            raise ValueError(f"explicit bids shape {bids.shape} != ({n_clients}, {n_tasks})")
-    else:
-        try:
-            model = BID_MODELS[auction.bid_model]
-        except KeyError:
-            known = ", ".join(sorted(BID_MODELS))
-            raise KeyError(f"unknown bid model {auction.bid_model!r}; known: {known}") from None
-        bids = model(np.random.default_rng(auction.bid_seed), n_clients, n_tasks)
-    mech = AUCTIONS.get(auction.mechanism)
-    res = mech(
-        bids,
-        auction.budget,
-        rng=np.random.default_rng(auction.bid_seed + 1),
-        **auction.options,
-    )
-    elig = np.zeros((n_clients, n_tasks), bool)
-    for s, ws in enumerate(res.winners):
-        for u in ws:
-            elig[u, s] = True
-    return elig, res
-
-
 # ------------------------------------------------------------- spec -> cfg
 
 
@@ -215,6 +175,7 @@ def _train_config(spec: ScenarioSpec) -> TrainConfig:
         deep_for=tuple(rt.deep_for),
         deep_depth=rt.deep_depth,
         backend=rt.backend,
+        policy=policy_from_spec(spec.policy, al.strategy),
     )
 
 
@@ -242,6 +203,7 @@ def _async_config(spec: ScenarioSpec) -> AsyncConfig:
         deep_for=tuple(rt.deep_for),
         deep_depth=rt.deep_depth,
         seed=spec.seed,
+        policy=policy_from_spec(spec.policy, al.strategy),
     )
 
 
@@ -252,9 +214,11 @@ class SyncFedEngine:
     """The sync lockstep round loop (``MMFLTrainer``) behind the Engine
     protocol — identical configs produce identical Histories."""
 
-    def __init__(self, spec: ScenarioSpec, tasks, eligibility=None):
+    def __init__(self, spec: ScenarioSpec, tasks, eligibility=None, incentive=None):
         self.spec = spec
-        self.trainer = MMFLTrainer(tasks, _train_config(spec), eligibility=eligibility)
+        self.trainer = MMFLTrainer(
+            tasks, _train_config(spec), eligibility=eligibility, incentive=incentive
+        )
 
     def run(self, verbose: bool = False) -> RunResult:
         h = self.trainer.run(verbose=verbose)
@@ -330,15 +294,16 @@ class SyntheticFamily:
             )
         return tasks
 
-    def sync_engine(self, spec: ScenarioSpec, eligibility=None) -> Engine:
-        return SyncFedEngine(spec, self.build_tasks(spec), eligibility)
+    def sync_engine(self, spec: ScenarioSpec, eligibility=None, incentive=None) -> Engine:
+        return SyncFedEngine(spec, self.build_tasks(spec), eligibility, incentive)
 
-    def async_engine(self, spec: ScenarioSpec, eligibility=None) -> Engine:
+    def async_engine(self, spec: ScenarioSpec, eligibility=None, incentive=None) -> Engine:
         acfg = _async_config(spec)
         adapters = [FedAsyncTask(t, s, acfg) for s, t in enumerate(self.build_tasks(spec))]
         for a, ts in zip(adapters, spec.tasks):
             a.work = ts.work
-        return AsyncEngineRunner(spec, AsyncMMFLEngine(adapters, acfg, eligibility), has_acc=True)
+        engine = AsyncMMFLEngine(adapters, acfg, eligibility, incentive)
+        return AsyncEngineRunner(spec, engine, has_acc=True)
 
 
 @register_task_family("arch")
@@ -373,11 +338,11 @@ class ArchFamily:
             )
         return tasks, data
 
-    def sync_engine(self, spec: ScenarioSpec, eligibility=None) -> Engine:
+    def sync_engine(self, spec: ScenarioSpec, eligibility=None, incentive=None) -> Engine:
         tasks, data = self.build_tasks(spec)
-        return ArchSyncEngine(spec, tasks, data, eligibility)
+        return ArchSyncEngine(spec, tasks, data, eligibility, incentive)
 
-    def async_engine(self, spec: ScenarioSpec, eligibility=None) -> Engine:
+    def async_engine(self, spec: ScenarioSpec, eligibility=None, incentive=None) -> Engine:
         from repro.launch.train import ArchAsyncTask
 
         tasks, data = self.build_tasks(spec)
@@ -393,7 +358,7 @@ class ArchFamily:
             )
             a.work = ts.work
             adapters.append(a)
-        engine = AsyncMMFLEngine(adapters, _async_config(spec), eligibility)
+        engine = AsyncMMFLEngine(adapters, _async_config(spec), eligibility, incentive)
         # ArchAsyncTask defines accuracy(): the history carries a real
         # next-token accuracy curve, so fairness unifies with synthetic
         return AsyncEngineRunner(spec, engine, has_acc=True)
@@ -414,7 +379,7 @@ class ArchSyncEngine:
     execution seam.
     """
 
-    def __init__(self, spec: ScenarioSpec, tasks, data, eligibility=None):
+    def __init__(self, spec: ScenarioSpec, tasks, data, eligibility=None, incentive=None):
         from repro.core.mmfl import MMFLCoordinator
         from repro.launch.train import make_arch_eval
 
@@ -432,15 +397,18 @@ class ArchSyncEngine:
             participation=spec.clients.participation,
             seed=spec.seed,
             eligibility=eligibility,
+            policy=policy_from_spec(spec.policy, spec.allocation.strategy),
         )
+        self.incentive = incentive
 
     def _acc_of(self, name: str) -> float:
         """Current next-token eval accuracy of one task's global params."""
         return float(self._eval_acc[name](self.tasks[name]["params"]))
 
-    def _run_task_round(self, name: str, ids, rng):
+    def _run_task_round(self, name: str, ids, rng, want_norm: bool = False):
         """One task's round: cohort execution + aggregation through the
-        pluggable backend. Returns the reported loss."""
+        pluggable backend. Returns (reported loss, mean cohort update norm
+        or None — computed only when the allocation policy opts in)."""
         import jax
         import jax.numpy as jnp
 
@@ -455,8 +423,12 @@ class ArchSyncEngine:
             job = ClientBatch(ids[:1], None, (jax.tree.map(lambda v: v[None], batch),))
             state = CohortTask(name, (t["params"], t["opt"]), t["opt_local_fn"])
             res = self.backend.run_cohort(state, job)
+            norm = None
+            if want_norm:
+                # displacement of the params (not opt-state) from the step
+                norm = float(stacked_delta_norms(res.updates[0], t["params"])[0])
             t["params"], t["opt"] = jax.tree.map(lambda leaf: leaf[0], res.updates)
-            return float(res.losses[0])
+            return float(res.losses[0]), norm
         # TRUE FedAvg: one cohort row per batch row (clients tiled to the
         # task batch size, as assemble_batch lays them out)
         w_rows = batch["client_weights"]
@@ -467,10 +439,13 @@ class ArchSyncEngine:
             CohortTask(name, t["params"], t["local_fn"]),
             ClientBatch(row_ids, None, (rows,)),
         )
+        norm = None
+        if want_norm:
+            norm = float(stacked_delta_norms(res.updates, t["params"]).mean())
         t["params"] = self.backend.aggregate(
             res.updates, w_rows, normalizer=jnp.maximum(w_rows.sum(), 1e-9)
         )
-        return float(res.losses.mean())
+        return float(res.losses.mean()), norm
 
     def run(self, verbose: bool = False) -> RunResult:
         spec, rt = self.spec, self.spec.runtime
@@ -494,6 +469,12 @@ class ArchSyncEngine:
                 if "coordinator" in coord_state:
                     self.coord.load_state(coord_state["coordinator"])
                     rng.bit_generator.state = coord_state["data_rng"]
+                    # incentive ledger + re-auctioned eligibility, so
+                    # resumed recruitment is budget- and schedule-exact
+                    if self.incentive is not None and "incentive" in coord_state:
+                        self.incentive.load_state(coord_state["incentive"])
+                        if self.incentive.eligibility is not None:
+                            self.coord.eligibility = np.asarray(self.incentive.eligibility, bool)
                     # pre-checkpoint curves, so the RunResult covers the
                     # WHOLE run, not just the post-resume tail
                     hist = coord_state.get("history", {})
@@ -511,20 +492,38 @@ class ArchSyncEngine:
                 start_round = step
                 if verbose:
                     print(f"resumed from round {step}")
+        want_norms = self.coord.wants_update_norms
         for r in range(start_round, rt.rounds):
+            if self.incentive is not None:
+                upd = self.incentive.recruit(
+                    RoundContext(
+                        round=r,
+                        task_names=self.names,
+                        losses=self.coord.losses,
+                        alpha=spec.allocation.alpha,
+                        n_clients=spec.clients.n_clients,
+                        eligibility=self.coord.eligibility,
+                    )
+                )
+                if upd is not None:
+                    self.coord.eligibility = np.asarray(upd.eligibility, bool)
             alloc = self.coord.next_round()
             t0 = time.time()
             line = []
             row = np.full(spec.clients.n_clients, -1, np.int64)
+            norms = np.full(len(self.names), np.nan) if want_norms else None
             for s, a in enumerate(self.names):
                 ids = alloc[a]
                 if len(ids) == 0:
                     line.append(f"{a}: -")
                     continue
                 row[ids] = s
-                loss = self._run_task_round(a, ids, rng)
+                loss, norm = self._run_task_round(a, ids, rng, want_norms)
+                if want_norms and norm is not None:
+                    norms[s] = norm
                 self.coord.report(a, loss)
                 line.append(f"{a}: {loss:.3f} ({len(ids)}c)")
+            self.coord.observe([len(alloc[a]) for a in self.names], norms)
             loss_hist.append([self.coord.tasks[a].loss for a in self.names])
             count_hist.append([len(alloc[a]) for a in self.names])
             alloc_hist.append(row)
@@ -538,12 +537,17 @@ class ArchSyncEngine:
                         "params": self.tasks[a]["params"],
                         "opt": self.tasks[a]["opt"],
                     }
+                coord_payload = {
+                    "coordinator": self.coord.state_dict(),
+                    "data_rng": rng.bit_generator.state,
+                }
+                if self.incentive is not None:
+                    coord_payload["incentive"] = self.incentive.state_dict()
                 ckpt.save(
                     r + 1,
                     task_state,
                     coordinator_state={
-                        "coordinator": self.coord.state_dict(),
-                        "data_rng": rng.bit_generator.state,
+                        **coord_payload,
                         "history": {
                             "loss": [list(x) for x in loss_hist],
                             "counts": [list(x) for x in count_hist],
@@ -589,29 +593,57 @@ def run_scenario(spec: ScenarioSpec, verbose: bool = False) -> RunResult:
     spec = copy.deepcopy(spec)
     family = TASK_FAMILIES.get(spec.family)()
     ALLOCATORS.get(spec.allocation.strategy)
+    if spec.policy is not None:
+        POLICIES.get(spec.policy.name)
     ARRIVAL_PROCESSES.get(spec.clients.arrival_process)
     BACKENDS.get(spec.runtime.backend)
     auction_summary = None
     eligibility = None
+    incentive = None
     if spec.auction is not None:
+        if spec.auction.budget <= 0:
+            raise ValueError(
+                f"auction.budget must be positive, got {spec.auction.budget}: "
+                "a non-positive budget recruits no clients (all-False "
+                "eligibility matrix), so no task could ever train"
+            )
+        INCENTIVES.get(spec.auction.incentive)
         K, S = spec.clients.n_clients, len(spec.tasks)
-        eligibility, res = build_eligibility(spec.auction, K, S)
+        incentive = incentive_from_spec(spec.auction, K, S)
+        # prime round 0; a mechanism may legally defer (return None), in
+        # which case everyone stays eligible until it first auctions
+        upd = incentive.recruit(
+            RoundContext(round=0, task_names=[t.name for t in spec.tasks], n_clients=K)
+        )
         auction_summary = {
             "mechanism": spec.auction.mechanism,
             "budget": spec.auction.budget,
-            "take_up": res.take_up.tolist(),
-            "min_take_up": res.min_take_up,
-            "diff_take_up": res.diff_take_up,
-            "spent": float(res.spent),
         }
+        if upd is not None:
+            eligibility = upd.eligibility
+            res = upd.result
+            if res is not None:
+                auction_summary.update(
+                    {
+                        "take_up": res.take_up.tolist(),
+                        "min_take_up": res.min_take_up,
+                        "diff_take_up": res.diff_take_up,
+                        "spent": float(res.spent),
+                    }
+                )
 
     if spec.runtime.mode == "sync":
-        engine = family.sync_engine(spec, eligibility)
+        engine = family.sync_engine(spec, eligibility, incentive)
     else:
-        engine = family.async_engine(spec, eligibility)
+        engine = family.async_engine(spec, eligibility, incentive)
 
     t0 = time.time()
     result = engine.run(verbose=verbose)
     result.wall_time = time.time() - t0
+    if incentive is not None:
+        # cross-round ledger: what the per-round protocol actually spent
+        auction_summary["incentive"] = spec.auction.incentive
+        auction_summary["auctions_run"] = int(incentive.auctions)
+        auction_summary["total_spent"] = float(incentive.spent)
     result.auction = auction_summary
     return result

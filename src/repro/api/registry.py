@@ -64,9 +64,16 @@ ARRIVAL_PROCESSES = Registry("arrival_process")
 AUCTIONS = Registry("auction")
 TASK_FAMILIES = Registry("task_family")
 BACKENDS = Registry("backend")
+# stateful round-by-round protocols (repro.api.policy): allocation
+# policies observe/allocate every round; incentive mechanisms may
+# re-auction recruitment against a cross-round budget ledger
+POLICIES = Registry("policy")
+INCENTIVES = Registry("incentive")
 
 register_allocator = ALLOCATORS.register
 register_arrival_process = ARRIVAL_PROCESSES.register
 register_auction = AUCTIONS.register
 register_task_family = TASK_FAMILIES.register
 register_backend = BACKENDS.register
+register_policy = POLICIES.register
+register_incentive = INCENTIVES.register

@@ -6,10 +6,11 @@ x runtime (sync lockstep rounds or the async FedAST-style engine). The
 tree is plain dataclasses, JSON round-trippable (``to_json``/``from_json``
 returns an equal spec), so sweeps and CI configs are data, not drivers.
 
-Registry keys (``allocation.strategy``, ``clients.arrival_process``,
-``auction.mechanism``, ``TaskSpec.family``) are validated against the
-registries at ``run_scenario`` time so a spec file can be authored before
-its plugin is imported.
+Registry keys (``allocation.strategy``, ``policy.name``,
+``clients.arrival_process``, ``auction.mechanism``, ``auction.incentive``,
+``TaskSpec.family``) are validated against the registries at
+``run_scenario`` time so a spec file can be authored before its plugin is
+imported.
 """
 
 from __future__ import annotations
@@ -63,17 +64,35 @@ class ClientPopulationSpec:
 
 @dataclass
 class AllocationSpec:
-    """Client->task allocator (ALLOCATORS key) and its fairness knob."""
+    """Client->task allocator (ALLOCATORS key) and its fairness knob.
+    When ``ScenarioSpec.policy`` is absent, the strategy maps onto its
+    bit-exact ``LegacyStrategyPolicy`` wrapper."""
 
     strategy: str = "fedfair"
     alpha: float = 3.0
 
 
 @dataclass
+class PolicySpec:
+    """Stateful allocation policy (POLICIES key) + constructor options —
+    e.g. ``PolicySpec("ucb_bandit", {"epsilon": 0.2})``. Overrides
+    ``allocation.strategy`` (which still supplies ``alpha``); omit it for
+    the legacy wrapper path."""
+
+    name: str = "fedfair"
+    options: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
 class AuctionSpec:
-    """Recruitment auction producing the eligibility matrix. ``bid_model``
-    names a built-in bid generator (seeded by ``bid_seed``); ``bids`` may
-    instead carry an explicit (K, S) matrix."""
+    """Recruitment incentive producing the eligibility matrix.
+    ``mechanism`` names the auction (AUCTIONS key); ``incentive`` names
+    the round-by-round protocol driving it (INCENTIVES key):
+    ``one_shot`` (legacy, round 0 only) or ``periodic_auction``
+    (re-auction every R rounds against the remaining budget; options in
+    ``incentive_options``, e.g. ``{"every": 5}``). ``bid_model`` names a
+    built-in bid generator (seeded by ``bid_seed``); ``bids`` may instead
+    carry an explicit (K, S) matrix."""
 
     mechanism: str = "maxmin_fair"
     budget: float = 29.0
@@ -81,6 +100,8 @@ class AuctionSpec:
     bid_seed: int = 0
     bids: Optional[List[List[float]]] = None
     options: Dict[str, Any] = field(default_factory=dict)
+    incentive: str = "one_shot"
+    incentive_options: Dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass
@@ -104,9 +125,11 @@ class RuntimeSpec:
     deep_for: Tuple[str, ...] = ("synth-cifar",)
     deep_depth: int = 3
     eval_every: int = 1
-    # async (FedAST) knobs
+    # async (FedAST) knobs. buffer_size=None derives a backend-aware
+    # default: 4 (the FedAST default) on serial, max(4, device_count) on
+    # the vmap/sharded backends so every flush can fill the device mesh.
     total_arrivals: int = 400
-    buffer_size: int = 4
+    buffer_size: Optional[int] = None
     beta: float = 0.5
     server_lr: float = 1.0
     max_staleness: Optional[int] = None
@@ -132,6 +155,7 @@ class ScenarioSpec:
     data_seed: int = 0
     clients: ClientPopulationSpec = field(default_factory=ClientPopulationSpec)
     allocation: AllocationSpec = field(default_factory=AllocationSpec)
+    policy: Optional[PolicySpec] = None
     auction: Optional[AuctionSpec] = None
     runtime: RuntimeSpec = field(default_factory=RuntimeSpec)
 
@@ -143,6 +167,8 @@ class ScenarioSpec:
             self.clients = _from_dict(ClientPopulationSpec, self.clients)
         if isinstance(self.allocation, dict):
             self.allocation = _from_dict(AllocationSpec, self.allocation)
+        if isinstance(self.policy, dict):
+            self.policy = _from_dict(PolicySpec, self.policy)
         if isinstance(self.auction, dict):
             self.auction = _from_dict(AuctionSpec, self.auction)
         if isinstance(self.runtime, dict):
@@ -160,6 +186,8 @@ class ScenarioSpec:
         d["runtime"]["deep_for"] = list(self.runtime.deep_for)
         if d["auction"] is None:
             del d["auction"]
+        if d["policy"] is None:
+            del d["policy"]
         return d
 
     def to_json(self, indent: int = 2) -> str:

@@ -6,8 +6,14 @@ Layout per checkpoint step:
         arrays.npz             # one entry per leaf, keyed by tree path
 Atomicity: written to a ``.tmp`` directory then renamed; a LATEST file
 points at the newest complete step. The MMFL CheckpointManager stores one
-subtree per task (params + optimizer state + coordinator scalars) so fair
-multi-task training resumes with its allocation state intact.
+subtree per task (params + optimizer state) plus the JSON-native
+``coordinator_state`` payload in STEP.json — the coordinator round/RNG
+stream, the stateful ``AllocationPolicy`` state (``policy.state_dict()``,
+nested inside the coordinator state), and the ``IncentiveMechanism``
+ledger (budget spent, auctions run, current eligibility) — so fair
+multi-task training resumes with its FULL allocation state intact:
+post-resume allocations, bandit/grad-norm policy decisions, and re-auction
+schedules are identical to an uninterrupted run (tests/test_policies.py).
 
 Pytree paths are serialised as '/'-joined dict keys / list indices; restore
 rebuilds the exact structure (dicts, lists, tuples) from the manifest, so no

@@ -1,5 +1,5 @@
 from repro.fed.async_engine import (AsyncConfig, AsyncHistory,  # noqa: F401
                                     AsyncMMFLEngine, FedAsyncTask,
-                                    client_speeds)
+                                    client_speeds, resolve_buffer_size)
 from repro.fed.data import FedTask, make_synthetic_task, standard_tasks  # noqa: F401
 from repro.fed.trainer import MMFLTrainer, TrainConfig  # noqa: F401

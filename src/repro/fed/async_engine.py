@@ -41,6 +41,8 @@ import numpy as np
 
 from repro.api.arrivals import get_arrival_process
 from repro.api.backend import ClientBatch, CohortTask, get_backend
+from repro.api.policy import (AllocationPolicy, RoundContext,
+                              stacked_delta_norms)
 from repro.core.allocation import AllocationStrategy
 from repro.core.mmfl import MMFLCoordinator
 from repro.fed.client import accuracy
@@ -54,11 +56,16 @@ from repro.fed.trainer import (cohort_update, fed_client_batch,
 @dataclass
 class AsyncConfig:
     total_arrivals: int = 400      # client completions to process
-    buffer_size: int = 4           # B: aggregate every B arrivals per task
+    # B: aggregate every B arrivals per task. None derives a
+    # backend-aware default (resolve_buffer_size): 4 on serial, at least
+    # jax.device_count() on vmap/sharded so flushes fill the device mesh
+    buffer_size: Optional[int] = None
     beta: float = 0.5              # staleness discount exponent
     server_lr: float = 1.0         # eta on the aggregated buffer delta
     alpha: float = 3.0
     strategy: AllocationStrategy = AllocationStrategy.FEDFAIR
+    # stateful allocation policy (api.policy); None wraps `strategy`
+    policy: Optional[AllocationPolicy] = None
     # client speed heterogeneity: "uniform" (all equal), "bimodal"
     # (slow_fraction of clients are speed 1/speed_spread), "lognormal"
     speed_profile: str = "uniform"
@@ -80,6 +87,20 @@ class AsyncConfig:
     deep_for: tuple = ("synth-cifar",)
     deep_depth: int = 3
     seed: int = 0
+
+
+def resolve_buffer_size(buffer_size, backend) -> int:
+    """Backend-aware default cohort sizing (ROADMAP item): with
+    ``buffer_size`` unset, the device-parallel backends (vmap/sharded)
+    flush in cohorts of at least ``jax.device_count()`` so every flush can
+    fill the device mesh; serial (and any custom backend) keeps the
+    FedAST default of 4. An explicit value always wins."""
+    if buffer_size is not None:
+        return int(buffer_size)
+    name = backend if isinstance(backend, str) else getattr(backend, "name", "")
+    if name in ("vmap", "sharded"):
+        return max(4, jax.device_count())
+    return 4
 
 
 def client_speeds(profile: str, n: int, rng: np.random.Generator,
@@ -230,7 +251,8 @@ class AsyncMMFLEngine:
     """
 
     def __init__(self, tasks: Sequence[AsyncTask], cfg: AsyncConfig,
-                 eligibility: Optional[np.ndarray] = None):
+                 eligibility: Optional[np.ndarray] = None,
+                 incentive=None):
         self.tasks = list(tasks)
         self.cfg = cfg
         self.S = len(self.tasks)
@@ -239,7 +261,11 @@ class AsyncMMFLEngine:
         self.coord = MMFLCoordinator(
             task_names=[t.name for t in self.tasks], n_clients=self.K,
             alpha=cfg.alpha, strategy=cfg.strategy, seed=cfg.seed,
-            eligibility=eligibility)
+            eligibility=eligibility, policy=cfg.policy)
+        self.buffer_size = resolve_buffer_size(cfg.buffer_size, cfg.backend)
+        # per-flush re-recruitment (api.policy.IncentiveMechanism); the
+        # legacy one_shot mechanism never updates after round 0
+        self.incentive = incentive
         self.speeds = client_speeds(
             cfg.speed_profile, self.K, np.random.default_rng(cfg.seed + 1),
             spread=cfg.speed_spread, slow_fraction=cfg.slow_fraction)
@@ -338,6 +364,26 @@ class AsyncMMFLEngine:
             self._version[s] = cur + 1
             self._metric[s] = task.evaluate(self._params[s])
             self.coord.report(task.name, self._metric[s])
+            # policy feedback: this flush's allocation counts (and, when
+            # the policy opts in, the mean delta norm of the buffer)
+            counts = np.zeros(self.S, np.int64)
+            counts[s] = len(kept)
+            norms = None
+            if self.coord.wants_update_norms:
+                norms = np.full(self.S, np.nan)
+                norms[s] = float(stacked_delta_norms(stacked).mean())
+            self.coord.observe(counts, norms, task=s)
+            self._n_flushes += 1
+            if self.incentive is not None:
+                upd = self.incentive.recruit(RoundContext(
+                    round=self._n_flushes,
+                    task_names=self.coord.task_names,
+                    losses=self.coord.losses, alpha=cfg.alpha,
+                    n_clients=self.K,
+                    eligibility=self.coord.eligibility))
+                if upd is not None:
+                    self.coord.eligibility = np.asarray(upd.eligibility,
+                                                        bool)
             if self._has_acc:
                 self._acc[s] = float(task.accuracy(self._params[s]))
                 self._hist_acc.append(self._acc.copy())
@@ -361,6 +407,7 @@ class AsyncMMFLEngine:
         self._events: list = []
         self._seq = 0
         self._dropped = 0
+        self._n_flushes = 0
         self._assignments: List[Tuple[int, int]] = []
         self._hist_time, self._hist_task = [], []
         self._hist_metric, self._hist_stale = [], []
@@ -381,7 +428,7 @@ class AsyncMMFLEngine:
             arrivals[job.task] += 1
             per_client[job.client] += 1
             self._buffers[job.task].append(job)
-            if len(self._buffers[job.task]) >= cfg.buffer_size:
+            if len(self._buffers[job.task]) >= self.buffer_size:
                 self._flush(job.task, t)
             self._dispatch(job.client, t)
             if verbose and processed % 50 == 0:

@@ -25,8 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.backend import ClientBatch, CohortTask, get_backend
-from repro.core.allocation import (AllocationStrategy,
-                                   custom_or_fedfair_probs)
+from repro.api.policy import (AllocationPolicy, LegacyStrategyPolicy,
+                              RoundContext, RoundObservation,
+                              stacked_delta_norms)
+from repro.core.allocation import AllocationStrategy
 from repro.fed.client import (accuracy, cohort_local_update_ids, init_mlp,
                               local_update)
 from repro.fed.data import FedTask
@@ -137,6 +139,9 @@ class TrainConfig:
     deep_depth: int = 3
     # cohort execution backend (api.backend BACKENDS key or instance)
     backend: str = "serial"
+    # stateful allocation policy (api.policy); None wraps `strategy`
+    # bit-exactly via LegacyStrategyPolicy
+    policy: Optional[AllocationPolicy] = None
 
 
 @dataclass
@@ -154,7 +159,8 @@ class History:
 
 class MMFLTrainer:
     def __init__(self, tasks: List[FedTask], cfg: TrainConfig,
-                 eligibility: Optional[np.ndarray] = None):
+                 eligibility: Optional[np.ndarray] = None,
+                 incentive=None):
         self.tasks = tasks
         self.cfg = cfg
         self.S = len(tasks)
@@ -166,6 +172,21 @@ class MMFLTrainer:
                      if eligibility is None else eligibility.astype(bool))
         self.backend = get_backend(cfg.backend)
         self._local_fn = fed_local_fn(cfg.tau, cfg.lr, cfg.batch_size)
+        self._names = [t.name for t in tasks]
+        # allocation dispatches through the policy object; sampling (and
+        # the RNG stream) stays here, so legacy strategies are bit-exact
+        self.policy = (cfg.policy if cfg.policy is not None
+                       else LegacyStrategyPolicy(cfg.strategy))
+        # per-round re-recruitment (api.policy.IncentiveMechanism); the
+        # legacy one_shot mechanism never updates after round 0
+        self.incentive = incentive
+        # construction-time snapshots: run() restores them so repeated
+        # run() calls are identical (the pre-policy contract) even though
+        # policy/incentive/eligibility state mutates during a run
+        self._elig0 = self.elig.copy()
+        self._policy_state0 = self.policy.state_dict()
+        self._incentive_state0 = (None if incentive is None
+                                  else incentive.state_dict())
 
     def _init_models(self, key):
         return init_task_models(self.tasks, key, self.cfg.hidden,
@@ -173,12 +194,17 @@ class MMFLTrainer:
                                 self.cfg.deep_depth)
 
     def _allocate(self, rng, losses, round_idx):
-        """Per-client task assignment, honouring eligibility."""
+        """Per-client task assignment, honouring eligibility. The policy
+        supplies the per-task probabilities (None selects round-robin);
+        sampling consumes THIS rng, never the policy's."""
         cfg = self.cfg
         m = max(1, int(round(cfg.participation * self.K)))
         active = rng.choice(self.K, size=m, replace=False)
         alloc = -np.ones(self.K, np.int64)      # -1: idle
-        if cfg.strategy == AllocationStrategy.ROUND_ROBIN:
+        p = self.policy.allocate(RoundContext(
+            round=round_idx, task_names=self._names, losses=losses,
+            alpha=cfg.alpha, n_clients=self.K, eligibility=self.elig))
+        if p is None:                           # round robin
             order = rng.permutation(active)
             nxt = round_idx
             for i in order:
@@ -193,11 +219,6 @@ class MMFLTrainer:
                         nxt = nxt + off + 1
                         break
             return alloc
-        if cfg.strategy == AllocationStrategy.RANDOM:
-            p = np.ones(self.S) / self.S
-        else:
-            # FEDFAIR (Eq. 4) or a registered custom allocator callable
-            p = custom_or_fedfair_probs(cfg.strategy, losses, cfg.alpha)
         for i in active:
             pe = p * self.elig[i]
             tot = pe.sum()
@@ -208,19 +229,34 @@ class MMFLTrainer:
 
     def run(self, verbose: bool = False) -> History:
         cfg = self.cfg
+        # reproducibility: every run() starts from the construction-time
+        # allocation/incentive state, so run() twice == run() once twice
+        self.elig = self._elig0.copy()
+        self.policy.load_state(self._policy_state0)
+        if self.incentive is not None:
+            self.incentive.load_state(self._incentive_state0)
         rng = np.random.default_rng(cfg.seed)
         params = self._init_models(jax.random.PRNGKey(cfg.seed))
         accs = np.zeros(self.S)
         for s, t in enumerate(self.tasks):
             accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
         acc_hist, alloc_hist, assign_hist = [], [], []
+        need_norms = getattr(self.policy, "wants_update_norms", False)
         for r in range(cfg.rounds):
             losses = np.maximum(1.0 - accs, 1e-6)   # paper: use test acc
+            if self.incentive is not None:
+                upd = self.incentive.recruit(RoundContext(
+                    round=r, task_names=self._names, losses=losses,
+                    alpha=cfg.alpha, n_clients=self.K,
+                    eligibility=self.elig))
+                if upd is not None:
+                    self.elig = np.asarray(upd.eligibility, bool)
             alloc = self._allocate(rng, losses, r)
             if cfg.dropout_prob > 0:
                 failed = rng.random(self.K) < cfg.dropout_prob
                 alloc = np.where(failed, -1, alloc)
             counts = np.array([(alloc == s).sum() for s in range(self.S)])
+            norms = np.full(self.S, np.nan) if need_norms else None
             for s, t in enumerate(self.tasks):
                 sel_ids = np.where(alloc == s)[0]
                 if len(sel_ids) == 0:
@@ -231,9 +267,16 @@ class MMFLTrainer:
                     CohortTask(t.name, params[s], self._local_fn),
                     fed_client_batch(t, task_round_key(cfg.seed, s, r),
                                      sel_ids))
+                if need_norms:
+                    norms[s] = float(
+                        stacked_delta_norms(res.updates, params[s]).mean())
                 params[s] = self.backend.aggregate(
                     res.updates, jnp.asarray(t.p_k[sel_ids]))
                 accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
+            self.policy.observe(RoundObservation(
+                round=r, task_names=self._names,
+                losses=np.maximum(1.0 - accs, 1e-6), alloc_counts=counts,
+                update_norms=norms))
             acc_hist.append(accs.copy())
             alloc_hist.append(counts)
             assign_hist.append(alloc.copy())

@@ -26,8 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import (AllocationSpec, ClientPopulationSpec, RuntimeSpec,
-                       ScenarioSpec, TaskSpec, run_scenario)
+from repro.api import (AllocationSpec, ClientPopulationSpec, PolicySpec,
+                       RuntimeSpec, ScenarioSpec, TaskSpec, run_scenario)
 from repro.configs import get_config, smoke_config
 from repro.core.allocation import AllocationStrategy
 from repro.fed.trainer import task_round_key
@@ -309,6 +309,7 @@ def build_scenario(args) -> ScenarioSpec:
             speed_spread=args.speed_spread,
             arrival_process=args.arrival_process),
         allocation=AllocationSpec(strategy=args.strategy, alpha=args.alpha),
+        policy=PolicySpec(name=args.policy) if args.policy else None,
         runtime=RuntimeSpec(
             mode="async" if args.async_mode else "sync",
             backend=args.backend,
@@ -334,6 +335,10 @@ def main():
     ap.add_argument("--alpha", type=float, default=3.0)
     ap.add_argument("--strategy", default="fedfair",
                     choices=[s.value for s in AllocationStrategy])
+    ap.add_argument("--policy", default=None,
+                    help="stateful allocation policy (POLICIES key, e.g. "
+                         "ucb_bandit | grad_norm); default: the bit-exact "
+                         "legacy wrapper for --strategy")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--participation", type=float, default=0.5)
@@ -352,8 +357,10 @@ def main():
                          "lockstep rounds")
     ap.add_argument("--arrivals", type=int, default=64,
                     help="async: client completions to process")
-    ap.add_argument("--buffer", type=int, default=4,
-                    help="async: aggregate every B arrivals per task")
+    ap.add_argument("--buffer", type=int, default=None,
+                    help="async: aggregate every B arrivals per task "
+                         "(default: backend-aware — 4 on serial, "
+                         "device count on vmap/sharded)")
     ap.add_argument("--beta", type=float, default=0.5,
                     help="async: staleness discount exponent")
     ap.add_argument("--speed-profile", default="bimodal",
@@ -368,7 +375,11 @@ def main():
             else build_scenario(args))
     names = [t.name for t in spec.tasks]
     if spec.runtime.mode == "async":
-        print(f"ASYNC MMFL: {names} buffer={spec.runtime.buffer_size} "
+        from repro.fed.async_engine import resolve_buffer_size
+
+        buf = resolve_buffer_size(spec.runtime.buffer_size,
+                                  spec.runtime.backend)
+        print(f"ASYNC MMFL: {names} buffer={buf} "
               f"beta={spec.runtime.beta} "
               f"profile={spec.clients.speed_profile} "
               f"arrival={spec.clients.arrival_process} "
