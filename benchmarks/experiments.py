@@ -339,6 +339,60 @@ def exp9_async_vs_sync(fast=True, seeds=(0, 1), target=0.55,
     return out
 
 
+def exp12_adaptive_buffers(fast=True, seeds=(0, 1),
+                           json_path="BENCH_buffers.json"):
+    """Adaptive-buffer headline: the async engine's static single-knob
+    buffer vs the stateful BufferControllers (staleness_target steering
+    mean staleness toward a setpoint, arrival_rate splitting capacity by
+    completion share) on a two-task skewed scenario — the SAME spec
+    through run_scenario, differing only in ``runtime.buffer_controller``.
+    Reports final min accuracy, the fairness spread, late-run mean
+    staleness (the controlled variable), and the final per-task sizes.
+    Writes BENCH_buffers.json for the CI artifact trail."""
+    K = 16
+    arrivals = 120 if fast else 600
+    target = 1.5
+    names = ["synth-mnist", "synth-fmnist"]
+    controllers = {
+        "static": (None, {}),
+        "staleness_target": ("staleness_target",
+                             {"target": target, "min_size": 1,
+                              "max_size": 16}),
+        "arrival_rate": ("arrival_rate", {"min_size": 1, "max_size": 16}),
+    }
+    out = {}
+    for label, (ctrl, opts) in controllers.items():
+        mins, variances, stale_tail, finals = [], [], [], []
+        for seed in seeds:
+            spec = _scenario(names, "fedfair", 0, seed,
+                             n_range=(60, 90), n_clients=K, tau=3,
+                             mode="async", total_arrivals=arrivals,
+                             buffer_size=3, beta=0.5,
+                             buffer_controller=ctrl,
+                             buffer_controller_options=dict(opts),
+                             clients_kw={"speed_profile": "bimodal",
+                                         "speed_spread": 8.0})
+            h = run_scenario(spec)
+            mins.append(h.min_acc[-1])
+            variances.append(h.var_acc[-1])
+            tail = max(1, len(h.staleness_mean) // 3)
+            stale_tail.append(float(np.mean(h.staleness_mean[-tail:])))
+            finals.append(np.asarray(h.buffer_sizes)[-1])
+        out[label] = {
+            "min_acc": float(np.mean(mins)),
+            "var_acc": float(np.mean(variances)),
+            "stale_tail_mean": float(np.mean(stale_tail)),
+            "final_buffer_sizes": np.mean(finals, axis=0).tolist(),
+        }
+    out["config"] = {"clients": K, "arrivals": arrivals,
+                     "buffer_size": 3, "staleness_target": target,
+                     "seeds": list(seeds)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out
+
+
 def exp10_backend_scaling(fast=True, json_path="BENCH_backends.json"):
     """ExecutionBackend headline: wall-time per round, serial vs vmap vs
     sharded, as the cohort grows — the SAME spec through run_scenario,

@@ -61,6 +61,7 @@ def experiment_specs():
         ("exp9_async_vs_sync_fedast", E.exp9_async_vs_sync),
         ("exp10_backend_scaling", E.exp10_backend_scaling),
         ("exp11_policy_comparison", E.exp11_policy_comparison),
+        ("exp12_adaptive_buffers", E.exp12_adaptive_buffers),
     ]
 
 

@@ -17,6 +17,13 @@ updates runs (serial / vmap / sharded) — is a registry axis
 core loop itself: stateful round-by-round ``AllocationPolicy`` objects
 and per-round re-auctioning ``IncentiveMechanism`` objects
 (``repro.api.policy``, ``ScenarioSpec.policy`` / ``AuctionSpec.incentive``).
+The async engine's per-task buffer sizing is the newest axis: stateful
+``BufferController`` objects (``@register_buffer_controller``,
+``repro.api.buffer``, ``RuntimeSpec.buffer_controller``) observe each
+flush and emit per-task buffer sizes, and the engine checkpoints its
+COMPLETE mid-run state (event queue, buffers, RNG streams, policy /
+incentive / controller state) through ``repro.checkpoint`` so async
+resume is event-for-event exact.
 """
 
 from __future__ import annotations
@@ -26,6 +33,7 @@ from repro.api.registry import (  # noqa: F401
     ARRIVAL_PROCESSES,
     AUCTIONS,
     BACKENDS,
+    BUFFER_CONTROLLERS,
     INCENTIVES,
     POLICIES,
     Registry,
@@ -33,6 +41,7 @@ from repro.api.registry import (  # noqa: F401
     register_arrival_process,
     register_auction,
     register_backend,
+    register_buffer_controller,
     register_incentive,
     register_policy,
     register_task_family,
@@ -53,6 +62,13 @@ from repro.api.arrivals import (  # noqa: F401
     Bursty,
     PoissonParticipation,
     get_arrival_process,
+)
+from repro.api.buffer import (  # noqa: F401
+    ArrivalRateController,
+    BufferController,
+    FlushObservation,
+    StalenessTargetController,
+    get_buffer_controller,
 )
 from repro.api.policy import (  # noqa: F401
     AllocationPolicy,

@@ -30,7 +30,10 @@ class ArrivalProcess:
     """Protocol: ``reset`` once per run, then ``next_start`` per dispatch.
 
     ``next_start(client, t)`` returns the earliest virtual time >= t at
-    which ``client`` may begin its next local job.
+    which ``client`` may begin its next local job. ``state_dict`` /
+    ``load_state`` (JSON-native) capture the process's RNG stream so the
+    async engine's mid-run checkpoints resume sampling mid-sequence —
+    subclasses with extra mutable state extend both.
     """
 
     def reset(self, n_clients: int, rng: np.random.Generator) -> None:
@@ -39,6 +42,13 @@ class ArrivalProcess:
 
     def next_start(self, client: int, t: float) -> float:
         raise NotImplementedError
+
+    def state_dict(self) -> dict:
+        return {"rng_state": self.rng.bit_generator.state}
+
+    def load_state(self, state: dict) -> None:
+        if "rng_state" in state:
+            self.rng.bit_generator.state = state["rng_state"]
 
 
 @register_arrival_process("always_on")
@@ -75,6 +85,16 @@ class Bursty(ArrivalProcess):
         if pos < self.duty * self.period:
             return t
         return t + (self.period - pos)
+
+    def state_dict(self) -> dict:
+        state = super().state_dict()
+        state["phase"] = self._phase.tolist()
+        return state
+
+    def load_state(self, state: dict) -> None:
+        super().load_state(state)
+        if "phase" in state:
+            self._phase = np.asarray(state["phase"], np.float64)
 
 
 @register_arrival_process("poisson")

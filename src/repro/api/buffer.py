@@ -1,0 +1,180 @@
+"""Adaptive per-task buffer controllers for the async (FedAST) engine.
+
+The async engine aggregates each task's buffered client updates every
+``B`` arrivals. Pre-controller, ``B`` was one static knob shared by every
+task — yet tasks have heterogeneous difficulty, work costs, and arrival
+rates (the exact heterogeneity FedFairMMFL targets), so the right buffer
+size is per-task and time-varying. A ``BufferController`` is the stateful
+seam that closes this loop: after every flush the engine feeds it a
+``FlushObservation`` (mean staleness of the flushed buffer, cumulative
+per-task arrival counts, virtual time) and reads back the full per-task
+size vector, so sizes may change flush-by-flush.
+
+Controllers are registered in ``BUFFER_CONTROLLERS``
+(``@register_buffer_controller``) and selected by
+``RuntimeSpec.buffer_controller`` / ``--buffer-controller``:
+
+  * ``static``           — the legacy behaviour, bit-exact: every task
+    keeps the resolved initial size forever (the default).
+  * ``staleness_target`` — integral control toward a mean-staleness
+    setpoint: staleness scales like ``arrival_rate x job_duration / B``,
+    so a task flushing too stale GROWS its buffer (rarer version bumps)
+    and a fresher-than-target task SHRINKS it (faster model refresh).
+  * ``arrival_rate``     — sizes proportional to each task's observed
+    share of completions, holding the total buffered capacity at
+    ``S x initial``: fast-arriving tasks batch more per flush, starved
+    tasks flush promptly instead of waiting out a too-large buffer.
+
+Controller state is JSON-native (``state_dict``/``load_state``) and
+threads through the async checkpoint payload, so a resumed run continues
+the exact size trajectory of an uninterrupted one.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.api.registry import BUFFER_CONTROLLERS, register_buffer_controller
+
+
+@dataclass
+class FlushObservation:
+    """What a controller sees after one flush: which task flushed, the
+    mean staleness of the aggregated buffer, how many updates survived
+    the staleness filter, cumulative per-task completion counts, and the
+    size vector that was in force when the flush triggered."""
+
+    flush: int  # 1-based flush count across all tasks
+    task: int  # flushed task index
+    time: float  # virtual time of the flush
+    staleness_mean: float
+    kept: int  # updates aggregated (post max_staleness filter)
+    arrivals: np.ndarray  # (S,) cumulative completions per task
+    sizes: np.ndarray  # (S,) buffer sizes in force at this flush
+
+
+class BufferController:
+    """Stateful per-task buffer-size protocol (the ``static`` built-in).
+
+    ``reset(n_tasks, initial_size)`` once per run, then ``observe`` per
+    flush and ``sizes() -> (S,) int array`` whenever the engine needs the
+    current thresholds. ``state_dict`` must be JSON-native: it is embedded
+    in the async checkpoint payload, and ``load_state(state_dict())``
+    must restore the exact size trajectory.
+    """
+
+    name = "static"
+
+    def reset(self, n_tasks: int, initial_size: int) -> None:
+        self.n_tasks = int(n_tasks)
+        self.initial_size = int(initial_size)
+        self._sizes = np.full(self.n_tasks, self.initial_size, np.int64)
+
+    def observe(self, obs: FlushObservation) -> None:
+        del obs
+
+    def sizes(self) -> np.ndarray:
+        return self._sizes
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"sizes": self._sizes.tolist()}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        if "sizes" in state:
+            self._sizes = np.asarray(state["sizes"], np.int64)
+
+
+# the protocol base IS the legacy wrapper: sizes never move
+register_buffer_controller("static")(BufferController)
+
+
+@register_buffer_controller("staleness_target")
+class StalenessTargetController(BufferController):
+    """Shrink/grow each task's buffer toward a mean-staleness setpoint.
+
+    Staleness (versions elapsed between dispatch and flush) scales like
+    ``arrival_rate x job_duration / buffer_size``: a BIGGER buffer flushes
+    less often, so in-flight jobs span fewer version bumps. Each flush of
+    task ``s`` moves only that task's size by ``step``: up when the
+    observed mean staleness exceeds ``target + deadband``, down when it
+    falls below ``target - deadband``, clipped to
+    ``[min_size, max_size]``.
+    """
+
+    name = "staleness_target"
+
+    def __init__(
+        self,
+        target: float = 1.0,
+        step: int = 1,
+        min_size: int = 1,
+        max_size: int = 64,
+        deadband: float = 0.25,
+    ):
+        if target < 0:
+            raise ValueError(f"staleness_target: target must be >= 0, got {target}")
+        if int(step) < 1:
+            raise ValueError(f"staleness_target: step must be >= 1, got {step}")
+        if not 1 <= int(min_size) <= int(max_size):
+            raise ValueError(
+                f"staleness_target: need 1 <= min_size <= max_size, "
+                f"got ({min_size}, {max_size})"
+            )
+        if deadband < 0:
+            raise ValueError(f"staleness_target: deadband must be >= 0, got {deadband}")
+        self.target = float(target)
+        self.step = int(step)
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+        self.deadband = float(deadband)
+
+    def observe(self, obs: FlushObservation) -> None:
+        s = obs.task
+        if obs.staleness_mean > self.target + self.deadband:
+            self._sizes[s] = min(self.max_size, int(self._sizes[s]) + self.step)
+        elif obs.staleness_mean < self.target - self.deadband:
+            self._sizes[s] = max(self.min_size, int(self._sizes[s]) - self.step)
+
+
+@register_buffer_controller("arrival_rate")
+class ArrivalRateController(BufferController):
+    """Per-task sizes proportional to observed arrival share.
+
+    Holds the TOTAL buffered capacity at ``n_tasks x initial_size`` and
+    splits it by each task's share of cumulative completions (clipped to
+    ``[min_size, max_size]``): a task receiving most of the arrivals
+    batches more per flush, while a starved task keeps a small buffer so
+    its rare updates reach the model promptly. The first ``warmup``
+    flushes keep the static sizes so early shares (one or two flushes)
+    don't whipsaw the thresholds.
+    """
+
+    name = "arrival_rate"
+
+    def __init__(self, min_size: int = 1, max_size: int = 64, warmup: int = 2):
+        if not 1 <= int(min_size) <= int(max_size):
+            raise ValueError(
+                f"arrival_rate: need 1 <= min_size <= max_size, got ({min_size}, {max_size})"
+            )
+        if int(warmup) < 0:
+            raise ValueError(f"arrival_rate: warmup must be >= 0, got {warmup}")
+        self.min_size = int(min_size)
+        self.max_size = int(max_size)
+        self.warmup = int(warmup)
+
+    def observe(self, obs: FlushObservation) -> None:
+        total = int(np.asarray(obs.arrivals).sum())
+        if obs.flush <= self.warmup or total == 0:
+            return
+        share = np.asarray(obs.arrivals, np.float64) / total
+        raw = np.rint(self.n_tasks * self.initial_size * share)
+        self._sizes = np.clip(raw, self.min_size, self.max_size).astype(np.int64)
+
+
+def get_buffer_controller(name: str, options: dict | None = None) -> BufferController:
+    """Instantiate a registered buffer controller from (name, options)."""
+    cls = BUFFER_CONTROLLERS.get(name)
+    return cls(**(options or {}))

@@ -33,6 +33,7 @@ from repro.api.registry import (
     ALLOCATORS,
     ARRIVAL_PROCESSES,
     BACKENDS,
+    BUFFER_CONTROLLERS,
     INCENTIVES,
     POLICIES,
     TASK_FAMILIES,
@@ -76,6 +77,9 @@ class RunResult:
     assignments: Optional[List] = None  # async (client, task) dispatch log
     staleness_mean: Optional[np.ndarray] = None
     versions: Optional[np.ndarray] = None
+    # async (F, S) per-task buffer sizes after each flush (the buffer
+    # controller's emission trajectory; constant rows under "static")
+    buffer_sizes: Optional[np.ndarray] = None
     dropped: int = 0
     auction: Optional[Dict[str, Any]] = None
     params: Optional[List] = None  # final per-task model pytrees
@@ -137,6 +141,12 @@ class RunResult:
             "wall_time": float(self.wall_time),
             "dropped": int(self.dropped),
             "versions": arr(self.versions),
+            "buffer_sizes": arr(self.buffer_sizes),
+            "final_buffer_sizes": (
+                None
+                if self.buffer_sizes is None or not len(self.buffer_sizes)
+                else np.asarray(self.buffer_sizes)[-1].tolist()
+            ),
             "fairness": self.fairness,
             "final_loss": self.final_loss,
         }
@@ -194,6 +204,11 @@ def _async_config(spec: ScenarioSpec) -> AsyncConfig:
         arrival_process=pop.arrival_process,
         arrival_options=dict(pop.arrival_options),
         max_staleness=rt.max_staleness,
+        buffer_controller=rt.buffer_controller,
+        buffer_controller_options=dict(rt.buffer_controller_options),
+        checkpoint_dir=rt.checkpoint_dir,
+        checkpoint_every=rt.checkpoint_every,
+        resume=rt.resume,
         backend=rt.backend,
         tau=rt.tau,
         lr=rt.lr,
@@ -257,6 +272,7 @@ class AsyncEngineRunner:
             virtual_time=float(h.time[-1]) if len(h.time) else 0.0,
             staleness_mean=h.staleness_mean,
             versions=h.versions,
+            buffer_sizes=h.buffer_sizes,
             dropped=h.dropped,
             assignments=h.assignments,
             spec=self.spec,
@@ -459,6 +475,13 @@ class ArchSyncEngine:
             ckpt = CheckpointManager(rt.checkpoint_dir)
             if rt.resume and ckpt.latest_step() is not None:
                 step, saved, coord_state = ckpt.restore()
+                if "async" in coord_state:
+                    raise ValueError(
+                        f"cannot resume: checkpoint step {step} in "
+                        f"{rt.checkpoint_dir!r} was written by the async "
+                        "engine; point the sync run at its own "
+                        "checkpoint directory"
+                    )
                 import jax
                 import jax.numpy as jnp
 
@@ -492,6 +515,13 @@ class ArchSyncEngine:
                 start_round = step
                 if verbose:
                     print(f"resumed from round {step}")
+            elif ckpt.steps():
+                # fresh-start run into a previously-used directory: drop
+                # stale steps so retention can't collect the new run's
+                # lower-numbered checkpoints. Safe under resume=True:
+                # reaching here means latest_step() found no COMPLETE
+                # step, so everything present is partial junk.
+                ckpt.clear()
         want_norms = self.coord.wants_update_norms
         for r in range(start_round, rt.rounds):
             if self.incentive is not None:
@@ -597,6 +627,15 @@ def run_scenario(spec: ScenarioSpec, verbose: bool = False) -> RunResult:
         POLICIES.get(spec.policy.name)
     ARRIVAL_PROCESSES.get(spec.clients.arrival_process)
     BACKENDS.get(spec.runtime.backend)
+    if spec.runtime.buffer_controller is not None:
+        BUFFER_CONTROLLERS.get(spec.runtime.buffer_controller)
+        if spec.runtime.mode == "sync":
+            raise ValueError(
+                f"buffer_controller "
+                f"{spec.runtime.buffer_controller!r} only applies to "
+                "mode='async' (sync rounds have no arrival buffers); "
+                "drop it or switch the runtime mode"
+            )
     auction_summary = None
     eligibility = None
     incentive = None

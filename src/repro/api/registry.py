@@ -69,6 +69,10 @@ BACKENDS = Registry("backend")
 # re-auction recruitment against a cross-round budget ledger
 POLICIES = Registry("policy")
 INCENTIVES = Registry("incentive")
+# stateful per-flush buffer sizing for the async engine (repro.api.buffer):
+# controllers observe each flush's staleness/arrival feedback and emit
+# per-task buffer sizes
+BUFFER_CONTROLLERS = Registry("buffer_controller")
 
 register_allocator = ALLOCATORS.register
 register_arrival_process = ARRIVAL_PROCESSES.register
@@ -77,3 +81,4 @@ register_task_family = TASK_FAMILIES.register
 register_backend = BACKENDS.register
 register_policy = POLICIES.register
 register_incentive = INCENTIVES.register
+register_buffer_controller = BUFFER_CONTROLLERS.register

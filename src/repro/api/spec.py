@@ -128,12 +128,24 @@ class RuntimeSpec:
     # async (FedAST) knobs. buffer_size=None derives a backend-aware
     # default: 4 (the FedAST default) on serial, max(4, device_count) on
     # the vmap/sharded backends so every flush can fill the device mesh.
+    # An explicit buffer_size must be >= 1 (0/negative would flush every
+    # arrival; rejected with ValueError at engine construction).
     total_arrivals: int = 400
     buffer_size: Optional[int] = None
     beta: float = 0.5
     server_lr: float = 1.0
     max_staleness: Optional[int] = None
-    # checkpoint/resume (arch sync engine)
+    # async adaptive per-task buffer sizing (BUFFER_CONTROLLERS registry
+    # key: static | staleness_target | arrival_rate | registered). None
+    # keeps the bit-exact legacy behaviour (the "static" controller).
+    buffer_controller: Optional[str] = None
+    buffer_controller_options: Dict[str, Any] = field(default_factory=dict)
+    # checkpoint/resume — mid-run full-state checkpoints for BOTH engines:
+    # the arch sync round loop (every `checkpoint_every` rounds) and the
+    # async event engine (every `checkpoint_every` flushes; the whole
+    # event queue / buffers / RNG / policy / controller state is saved, so
+    # a resumed async run is event-for-event identical to an
+    # uninterrupted one)
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 10
     resume: bool = False

@@ -15,6 +15,15 @@ multi-task training resumes with its FULL allocation state intact:
 post-resume allocations, bandit/grad-norm policy decisions, and re-auction
 schedules are identical to an uninterrupted run (tests/test_policies.py).
 
+The ASYNC engine checkpoints through the same substrate
+(``AsyncMMFLEngine._save_checkpoint``): each per-task subtree carries the
+current params PLUS every retained dispatch-version pytree (in-flight
+jobs must aggregate against the exact base they trained from), and the
+STEP.json payload embeds the engine's complete JSON-native
+``state_dict()`` — event queue, buffers, staleness bookkeeping, RNG
+streams, and policy/incentive/buffer-controller state — so an async
+resume is event-for-event identical (tests/test_async_resume.py).
+
 Pytree paths are serialised as '/'-joined dict keys / list indices; restore
 rebuilds the exact structure (dicts, lists, tuples) from the manifest, so no
 template pytree is needed — but ``restore(like=...)`` is supported to cast
@@ -138,17 +147,43 @@ class CheckpointManager:
                         metadata={"task": name, "step": step})
         meta = {"step": step, "tasks": sorted(tasks),
                 "coordinator": coordinator_state or {}}
-        with open(os.path.join(sd, "STEP.json"), "w") as f:
+        # STEP.json IS the step-completeness marker (latest_step's
+        # fallback keys on its existence) and LATEST the newest pointer:
+        # both land atomically via tmp + rename so a kill mid-write can
+        # never leave a present-but-truncated marker
+        tmp = os.path.join(sd, "STEP.json.tmp")
+        with open(tmp, "w") as f:
             json.dump(meta, f)
-        with open(os.path.join(self.dir, "LATEST"), "w") as f:
+        os.rename(tmp, os.path.join(sd, "STEP.json"))
+        tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(tmp, "w") as f:
             f.write(str(step))
+        os.rename(tmp, os.path.join(self.dir, "LATEST"))
         self._gc()
 
+    def _complete(self, step: int) -> bool:
+        """STEP.json (written atomically, last) marks a step complete."""
+        return os.path.exists(os.path.join(self._step_dir(step),
+                                           "STEP.json"))
+
     def latest_step(self) -> Optional[int]:
+        """Newest COMPLETE step. ``save`` writes the step directory
+        BEFORE updating LATEST, so a kill in that window (or a deleted/
+        corrupt/dangling LATEST — e.g. the pointed-to step dir was
+        removed by hand) must not hide or crash on existing steps: the
+        pointer is validated, and on any miss we fall back to the
+        highest step directory that actually holds a STEP.json."""
         p = os.path.join(self.dir, "LATEST")
-        if not os.path.exists(p):
-            return None
-        return int(open(p).read().strip())
+        try:
+            step = int(open(p).read().strip())
+            if self._complete(step):
+                return step
+        except (FileNotFoundError, ValueError):
+            pass
+        for s in reversed(self.steps()):
+            if self._complete(s):
+                return s
+        return None
 
     def restore(self, step: Optional[int] = None):
         """Returns (step, tasks dict, coordinator_state) or None."""
@@ -170,6 +205,19 @@ class CheckpointManager:
             if d.startswith("step_") and not d.endswith(".tmp"):
                 out.append(int(d.split("_")[1]))
         return sorted(out)
+
+    def clear(self):
+        """Remove every step and LATEST. A fresh (non-resume) run
+        starting over in a previously-used directory must call this
+        before its first save: ``_gc`` assumes monotonically increasing
+        step numbers, so a stale HIGHER-numbered step from the earlier
+        run would get the new run's first checkpoint garbage-collected
+        and leave LATEST dangling at a deleted step."""
+        latest = os.path.join(self.dir, "LATEST")
+        if os.path.exists(latest):
+            os.remove(latest)     # first, so a kill mid-clear can never
+        for s in self.steps():    # leave LATEST pointing at a gone step
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     def _gc(self):
         steps = self.steps()

@@ -28,6 +28,18 @@ the sync trainer's round exactly (tested to 1e-6).
 Tasks are pluggable via the ``AsyncTask`` adapter protocol, so the same
 engine drives the synthetic FedTask MLPs here and the multi-architecture
 LM tasks in ``launch/train.py --async``.
+
+Two state-management seams close the loop for LONG runs:
+
+  - per-task ADAPTIVE buffer sizes: a pluggable ``BufferController``
+    (``api.buffer``) observes every flush's staleness/arrival feedback
+    and emits the per-task thresholds; ``static`` (the default) is the
+    bit-exact legacy single knob;
+  - mid-run CHECKPOINTING: ``state_dict``/``load_state`` serialise the
+    complete engine state — event queue, buffers, retained model
+    versions, RNG streams, policy/incentive/controller state — through
+    ``checkpoint/checkpoint.py``, so a resumed run (``AsyncConfig.resume``)
+    is event-for-event identical to an uninterrupted one.
 """
 from __future__ import annotations
 
@@ -41,6 +53,7 @@ import numpy as np
 
 from repro.api.arrivals import get_arrival_process
 from repro.api.backend import ClientBatch, CohortTask, get_backend
+from repro.api.buffer import FlushObservation, get_buffer_controller
 from repro.api.policy import (AllocationPolicy, RoundContext,
                               stacked_delta_norms)
 from repro.core.allocation import AllocationStrategy
@@ -76,6 +89,18 @@ class AsyncConfig:
     arrival_process: str = "always_on"
     arrival_options: dict = field(default_factory=dict)
     max_staleness: Optional[int] = None   # drop updates staler than this
+    # adaptive per-task buffer sizing (api.buffer BUFFER_CONTROLLERS key);
+    # None selects "static" — the bit-exact legacy single-knob behaviour
+    buffer_controller: Optional[str] = None
+    buffer_controller_options: dict = field(default_factory=dict)
+    # mid-run checkpointing: every `checkpoint_every` FLUSHES the complete
+    # engine state (event queue, buffers, retained versions, RNG streams,
+    # policy/incentive/controller state) is written to checkpoint_dir;
+    # resume=True restores the latest step and replays the tail
+    # event-for-event identically to an uninterrupted run
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 10
+    resume: bool = False
     # cohort execution backend (api.backend BACKENDS key or instance)
     backend: str = "serial"
     # local training (mirrors sync TrainConfig)
@@ -94,8 +119,15 @@ def resolve_buffer_size(buffer_size, backend) -> int:
     ``buffer_size`` unset, the device-parallel backends (vmap/sharded)
     flush in cohorts of at least ``jax.device_count()`` so every flush can
     fill the device mesh; serial (and any custom backend) keeps the
-    FedAST default of 4. An explicit value always wins."""
+    FedAST default of 4. An explicit value always wins — but must be
+    >= 1: 0 or negative would silently flush on EVERY arrival (no
+    buffering at all), which is never what a caller meant."""
     if buffer_size is not None:
+        if int(buffer_size) < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1, got {buffer_size}: a "
+                "non-positive buffer would flush every single arrival "
+                "(leave it unset for the backend-aware default)")
         return int(buffer_size)
     name = backend if isinstance(backend, str) else getattr(backend, "name", "")
     if name in ("vmap", "sharded"):
@@ -221,6 +253,9 @@ class AsyncHistory:
     versions: np.ndarray        # (S,) final model versions
     assignments: List[Tuple[int, int]]  # (client, task) dispatch log
     dropped: int = 0            # updates discarded for exceeding staleness
+    # (F, S) per-task buffer sizes in force AFTER each flush (the buffer
+    # controller's emission trajectory; constant rows under "static")
+    buffer_sizes: Optional[np.ndarray] = None
     # (F, S) measured eval accuracy, when every task defines accuracy()
     # (arch families); fed tasks keep the legacy 1 - f_s derivation
     acc_eval: Optional[np.ndarray] = None
@@ -263,6 +298,26 @@ class AsyncMMFLEngine:
             alpha=cfg.alpha, strategy=cfg.strategy, seed=cfg.seed,
             eligibility=eligibility, policy=cfg.policy)
         self.buffer_size = resolve_buffer_size(cfg.buffer_size, cfg.backend)
+        # adaptive per-task buffer sizing (api.buffer): the controller is
+        # observed after every flush and emits the per-task thresholds;
+        # "static" (the default) keeps the legacy single knob bit-exactly
+        if cfg.buffer_controller is None and cfg.buffer_controller_options:
+            raise ValueError(
+                "buffer_controller_options were given without a "
+                "buffer_controller; name one (e.g. 'staleness_target') "
+                "or drop the options")
+        try:
+            self.controller = get_buffer_controller(
+                cfg.buffer_controller or "static",
+                cfg.buffer_controller_options)
+        except TypeError as e:
+            # e.g. options passed to "static" (which takes none), or a
+            # typo'd option name — surface the controller and options
+            # instead of a bare constructor TypeError
+            raise ValueError(
+                f"buffer_controller {cfg.buffer_controller!r} rejected "
+                f"options {cfg.buffer_controller_options!r}: {e}"
+            ) from None
         # per-flush re-recruitment (api.policy.IncentiveMechanism); the
         # legacy one_shot mechanism never updates after round 0
         self.incentive = incentive
@@ -387,15 +442,31 @@ class AsyncMMFLEngine:
             if self._has_acc:
                 self._acc[s] = float(task.accuracy(self._params[s]))
                 self._hist_acc.append(self._acc.copy())
+            stale_mean = float(np.mean(stale))
+            # adaptive buffer sizing: the controller sees this flush's
+            # staleness/arrival feedback and emits the per-task sizes in
+            # force from the NEXT arrival on ("static" never moves them)
+            self.controller.observe(FlushObservation(
+                flush=self._n_flushes, task=s, time=float(t),
+                staleness_mean=stale_mean, kept=len(kept),
+                arrivals=self._arrivals.copy(),
+                sizes=self._buffer_sizes.copy()))
+            self._buffer_sizes = np.asarray(self.controller.sizes(),
+                                            np.int64).copy()
             self._hist_time.append(t)
             self._hist_task.append(s)
             self._hist_metric.append(self._metric.copy())
-            self._hist_stale.append(float(np.mean(stale)))
+            self._hist_stale.append(stale_mean)
+            self._hist_bufsz.append(self._buffer_sizes.copy())
 
-    # -- driver ------------------------------------------------------------
+    # -- checkpoint state --------------------------------------------------
 
-    def run(self, verbose: bool = False) -> AsyncHistory:
+    def _init_state(self):
+        """Fresh run state: everything ``state_dict`` serialises."""
         cfg = self.cfg
+        self.controller.reset(self.S, self.buffer_size)
+        self._buffer_sizes = np.asarray(self.controller.sizes(),
+                                        np.int64).copy()
         self._params = [t.init(cfg.seed) for t in self.tasks]
         self._metric = np.array([t.evaluate(p) for t, p in
                                  zip(self.tasks, self._params)])
@@ -408,32 +479,223 @@ class AsyncMMFLEngine:
         self._seq = 0
         self._dropped = 0
         self._n_flushes = 0
+        self._processed = 0
         self._assignments: List[Tuple[int, int]] = []
         self._hist_time, self._hist_task = [], []
         self._hist_metric, self._hist_stale = [], []
+        self._hist_bufsz: List[np.ndarray] = []
         self._hist_acc: List[np.ndarray] = []
         self._acc = (np.array([float(t.accuracy(p)) for t, p in
                                zip(self.tasks, self._params)])
                      if self._has_acc else None)
-        arrivals = np.zeros(self.S, np.int64)
-        per_client = np.zeros(self.K, np.int64)
+        self._arrivals = np.zeros(self.S, np.int64)
+        self._per_client = np.zeros(self.K, np.int64)
 
         for i in range(self.K):              # everyone starts training
             self._dispatch(i, 0.0)
 
-        processed = 0
-        while processed < cfg.total_arrivals and self._events:
+    @staticmethod
+    def _job_payload(j: _Job) -> list:
+        return [int(j.client), int(j.task), int(j.version),
+                float(j.dispatch_time)]
+
+    def state_dict(self) -> Dict:
+        """The COMPLETE control state of a mid-run engine, JSON-native:
+        virtual-time event queue (in-flight jobs), per-task buffers,
+        retained-version refcounts, staleness/arrival bookkeeping, the
+        full history so far, both RNG streams (coordinator + arrival
+        process), and the policy / incentive / buffer-controller state.
+        Model pytrees (current params + retained versions) travel
+        separately through ``checkpoint.save_pytree`` — see
+        ``_save_checkpoint``. ``load_state(state_dict(), params)`` then
+        continues event-for-event identically to an uninterrupted run.
+
+        The embedded history/assignment log grows with run length (the
+        same whole-run-RunResult-on-resume design as the sync engine's
+        checkpoints); for very long runs raise ``checkpoint_every``
+        accordingly — an append-only history sidecar is a ROADMAP item."""
+        state = {
+            "processed": int(self._processed),
+            "n_flushes": int(self._n_flushes),
+            "seq": int(self._seq),
+            "dropped": int(self._dropped),
+            "version": [int(v) for v in self._version],
+            "metric": [float(m) for m in self._metric],
+            "acc": (None if self._acc is None
+                    else [float(a) for a in self._acc]),
+            "events": [[float(t), int(seq), self._job_payload(j)]
+                       for t, seq, j in self._events],
+            "buffers": [[self._job_payload(j) for j in buf]
+                        for buf in self._buffers],
+            "retained": [{str(v): int(slot[1]) for v, slot in r.items()}
+                         for r in self._retained],
+            "arrivals": self._arrivals.tolist(),
+            "per_client": self._per_client.tolist(),
+            "assignments": [[int(c), int(s)]
+                            for c, s in self._assignments],
+            "history": {
+                "time": [float(x) for x in self._hist_time],
+                "task": [int(x) for x in self._hist_task],
+                "metric": [[float(v) for v in m]
+                           for m in self._hist_metric],
+                "stale": [float(x) for x in self._hist_stale],
+                "acc": [[float(v) for v in a] for a in self._hist_acc],
+                "buffer_sizes": [[int(v) for v in b]
+                                 for b in self._hist_bufsz],
+            },
+            "buffer_sizes": [int(v) for v in self._buffer_sizes],
+            "controller": self.controller.state_dict(),
+            "coordinator": self.coord.state_dict(),
+            # the incentive may re-recruit mid-run; the coordinator state
+            # does not embed the matrix, so it is captured here
+            "eligibility": np.asarray(self.coord.eligibility,
+                                      bool).tolist(),
+            "arrival": self.arrival.state_dict(),
+        }
+        if self.incentive is not None:
+            state["incentive"] = self.incentive.state_dict()
+        return state
+
+    def load_state(self, state: Dict, task_params: Dict) -> None:
+        """Inverse of ``state_dict``. ``task_params`` maps task name ->
+        ``{"params": pytree, "retained": {str(version): pytree}}`` as
+        restored by ``CheckpointManager`` (see ``_save_checkpoint``)."""
+        self.controller.reset(self.S, self.buffer_size)
+        self._processed = int(state["processed"])
+        self._n_flushes = int(state["n_flushes"])
+        self._seq = int(state["seq"])
+        self._dropped = int(state["dropped"])
+        self._version = [int(v) for v in state["version"]]
+        self._metric = np.asarray(state["metric"], np.float64)
+        self._acc = (None if state["acc"] is None
+                     else np.asarray(state["acc"], np.float64))
+        self._events = [(t, int(seq), _Job(int(c), int(s), int(v), dt))
+                        for t, seq, (c, s, v, dt) in state["events"]]
+        self._buffers = [[_Job(int(c), int(s), int(v), dt)
+                          for c, s, v, dt in buf]
+                         for buf in state["buffers"]]
+        self._params, self._retained = [], []
+        for s, task in enumerate(self.tasks):
+            tree = task_params[task.name]
+            self._params.append(
+                jax.tree.map(jnp.asarray, tree["params"]))
+            self._retained.append({
+                int(v): [jax.tree.map(jnp.asarray, tree["retained"][v]),
+                         int(cnt)]
+                for v, cnt in state["retained"][s].items()})
+        self._arrivals = np.asarray(state["arrivals"], np.int64)
+        self._per_client = np.asarray(state["per_client"], np.int64)
+        self._assignments = [(int(c), int(s))
+                             for c, s in state["assignments"]]
+        hist = state["history"]
+        self._hist_time = list(hist["time"])
+        self._hist_task = [int(x) for x in hist["task"]]
+        self._hist_metric = [np.asarray(m, np.float64)
+                             for m in hist["metric"]]
+        self._hist_stale = list(hist["stale"])
+        self._hist_acc = [np.asarray(a, np.float64) for a in hist["acc"]]
+        self._hist_bufsz = [np.asarray(b, np.int64)
+                            for b in hist["buffer_sizes"]]
+        self._buffer_sizes = np.asarray(state["buffer_sizes"], np.int64)
+        self.controller.load_state(state["controller"])
+        self.coord.load_state(state["coordinator"])
+        self.coord.eligibility = np.asarray(state["eligibility"], bool)
+        self.arrival.load_state(state["arrival"])
+        if self.incentive is not None and "incentive" in state:
+            self.incentive.load_state(state["incentive"])
+        # a directly-loaded engine (no CheckpointManager involved) must
+        # CONTINUE from this state on run(), not re-initialise
+        self._state_loaded = True
+
+    def _save_checkpoint(self, ckpt) -> None:
+        """One full-state checkpoint step, keyed by flush count: model
+        pytrees (current params + every RETAINED dispatch version, so
+        in-flight jobs aggregate against the exact base they trained
+        from) via the numpy/JSON substrate, everything else JSON-native
+        in the step's coordinator payload."""
+        trees = {}
+        for s, task in enumerate(self.tasks):
+            trees[task.name] = {
+                "params": self._params[s],
+                "retained": {str(v): slot[0]
+                             for v, slot in self._retained[s].items()},
+            }
+        ckpt.save(self._n_flushes, trees,
+                  coordinator_state={"async": self.state_dict()})
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self, verbose: bool = False) -> AsyncHistory:
+        cfg = self.cfg
+        ckpt = None
+        if cfg.checkpoint_dir:
+            from repro.checkpoint import CheckpointManager
+            ckpt = CheckpointManager(cfg.checkpoint_dir)
+        resumed = getattr(self, "_state_loaded", False)
+        if ckpt is not None and cfg.resume \
+                and ckpt.latest_step() is not None:
+            step, trees, coord_state = ckpt.restore()
+            if "async" not in coord_state:
+                # written by a different engine (e.g. the sync arch
+                # loop): starting fresh here would silently retrain AND
+                # garbage-collect the foreign run's checkpoints
+                raise ValueError(
+                    f"cannot resume: checkpoint step {step} in "
+                    f"{cfg.checkpoint_dir!r} carries no async engine "
+                    "state (it was written by a different engine); "
+                    "point the async run at its own checkpoint "
+                    "directory")
+            self.load_state(coord_state["async"], trees)
+            resumed = True
+            if verbose:
+                print(f"resumed from flush {step} "
+                      f"(arrival {self._processed})")
+        if not resumed:
+            if ckpt is not None and ckpt.steps():
+                # starting over in a used directory: drop stale steps so
+                # retention can't collect the new run's lower-numbered
+                # checkpoints (and leave LATEST dangling). Safe even
+                # under resume=True: reaching here means latest_step()
+                # found NO complete step, so everything present is
+                # partial junk from a killed save.
+                ckpt.clear()
+            self._init_state()
+        self._state_loaded = False
+
+        while self._processed < cfg.total_arrivals and self._events:
             t, _, job = heapq.heappop(self._events)
-            processed += 1
-            arrivals[job.task] += 1
-            per_client[job.client] += 1
+            self._processed += 1
+            self._arrivals[job.task] += 1
+            self._per_client[job.client] += 1
             self._buffers[job.task].append(job)
-            if len(self._buffers[job.task]) >= self.buffer_size:
+            flushes_before = self._n_flushes
+            if len(self._buffers[job.task]) >= \
+                    self._buffer_sizes[job.task]:
                 self._flush(job.task, t)
+                # a controller may have SHRUNK other tasks' sizes below
+                # their current occupancy: sweep so a starved task's
+                # buffered updates flush promptly instead of aging until
+                # its own next (rare) arrival. A no-op under "static"
+                # (sizes never move, so no other buffer is at threshold).
+                swept = True
+                while swept:
+                    swept = False
+                    for s in range(self.S):
+                        if (self._buffers[s] and len(self._buffers[s])
+                                >= self._buffer_sizes[s]):
+                            self._flush(s, t)
+                            swept = True
             self._dispatch(job.client, t)
-            if verbose and processed % 50 == 0:
+            if verbose and self._processed % 50 == 0:
                 f = " ".join(f"{m:.3f}" for m in self._metric)
-                print(f"  arrival {processed:5d} t={t:8.2f} f_s=[{f}]")
+                print(f"  arrival {self._processed:5d} t={t:8.2f} "
+                      f"f_s=[{f}]")
+            # checkpoint when the flush count CROSSES a cadence multiple
+            # (one arrival can trigger several flushes via the sweep)
+            if (ckpt is not None and cfg.checkpoint_every > 0
+                    and self._n_flushes // cfg.checkpoint_every
+                    > flushes_before // cfg.checkpoint_every):
+                self._save_checkpoint(ckpt)
 
         return AsyncHistory(
             time=np.array(self._hist_time),
@@ -442,8 +704,11 @@ class AsyncMMFLEngine:
                     if self._hist_metric else
                     np.zeros((0, self.S))),
             staleness_mean=np.array(self._hist_stale),
-            arrivals=arrivals, updates_per_client=per_client,
+            arrivals=self._arrivals,
+            updates_per_client=self._per_client,
             versions=np.array(self._version, np.int64),
             assignments=self._assignments, dropped=self._dropped,
+            buffer_sizes=(np.array(self._hist_bufsz, np.int64)
+                          .reshape(-1, self.S)),
             acc_eval=(np.array(self._hist_acc).reshape(-1, self.S)
                       if self._has_acc else None))

@@ -318,6 +318,7 @@ def build_scenario(args) -> ScenarioSpec:
             total_arrivals=args.arrivals,
             buffer_size=args.buffer,
             beta=args.beta,
+            buffer_controller=args.buffer_controller,
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
             resume=args.resume))
@@ -348,9 +349,18 @@ def main():
     ap.add_argument("--backend", default="serial",
                     help="cohort execution backend (serial | vmap | "
                          "sharded | registered BACKENDS key)")
-    ap.add_argument("--checkpoint-dir", default=None)
-    ap.add_argument("--checkpoint-every", type=int, default=10)
-    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="full-state checkpoints for BOTH engines: every "
+                         "N rounds (sync) or N flushes (async)")
+    ap.add_argument("--checkpoint-every", "--ckpt-every", type=int,
+                    default=10, dest="checkpoint_every",
+                    help="rounds (sync) / flushes (async) between "
+                         "checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in "
+                         "--checkpoint-dir (async resume is "
+                         "event-for-event identical to an uninterrupted "
+                         "run)")
     ap.add_argument("--async", action="store_true", dest="async_mode",
                     help="event-driven async engine (FedAST-style buffered "
                          "staleness-aware aggregation) instead of "
@@ -363,6 +373,11 @@ def main():
                          "device count on vmap/sharded)")
     ap.add_argument("--beta", type=float, default=0.5,
                     help="async: staleness discount exponent")
+    ap.add_argument("--buffer-controller", default=None,
+                    help="async: adaptive per-task buffer sizing "
+                         "(static | staleness_target | arrival_rate | "
+                         "registered BUFFER_CONTROLLERS key); default: "
+                         "static (the legacy fixed knob)")
     ap.add_argument("--speed-profile", default="bimodal",
                     choices=["uniform", "bimodal", "lognormal"])
     ap.add_argument("--speed-spread", type=float, default=4.0)
@@ -380,6 +395,7 @@ def main():
         buf = resolve_buffer_size(spec.runtime.buffer_size,
                                   spec.runtime.backend)
         print(f"ASYNC MMFL: {names} buffer={buf} "
+              f"controller={spec.runtime.buffer_controller or 'static'} "
               f"beta={spec.runtime.beta} "
               f"profile={spec.clients.speed_profile} "
               f"arrival={spec.clients.arrival_process} "

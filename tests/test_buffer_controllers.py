@@ -1,0 +1,247 @@
+"""Adaptive per-task buffer controllers (api.buffer).
+
+Covers: static bit-exactness vs the pre-controller single-knob traces,
+staleness_target steering mean staleness toward its setpoint on a
+two-task skewed-speed scenario, arrival_rate tracking completion shares,
+per-task size serialization in RunResult.to_json(), registry error
+paths, and the resolve_buffer_size validation satellite.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (BUFFER_CONTROLLERS, ArrivalRateController,
+                       BufferController, ClientPopulationSpec,
+                       FlushObservation, RuntimeSpec, ScenarioSpec,
+                       StalenessTargetController, TaskSpec,
+                       get_buffer_controller, register_buffer_controller,
+                       run_scenario)
+
+
+def skewed_spec(controller=None, options=None, total_arrivals=60,
+                buffer_size=3, **clients_kw):
+    """Two tasks, bimodal client speeds (the skew that produces real
+    staleness: slow clients' jobs span multiple flushes)."""
+    kw = dict(n_clients=12, speed_profile="bimodal", speed_spread=8.0)
+    kw.update(clients_kw)
+    return ScenarioSpec(
+        name="buf",
+        seed=0,
+        tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]}),
+               TaskSpec("synth-fmnist", options={"n_range": [40, 60]})],
+        clients=ClientPopulationSpec(**kw),
+        runtime=RuntimeSpec(mode="async", tau=2,
+                            total_arrivals=total_arrivals,
+                            buffer_size=buffer_size,
+                            buffer_controller=controller,
+                            buffer_controller_options=options or {}))
+
+
+# ------------------------------------------------------ static bit-exact
+
+def test_static_controller_is_bit_exact_with_legacy_single_knob():
+    """Acceptance: buffer_controller=None (the legacy path) and an
+    explicit "static" controller produce IDENTICAL traces — curves,
+    assignment log, flush times, and a constant size trajectory."""
+    legacy = run_scenario(skewed_spec(controller=None))
+    static = run_scenario(skewed_spec(controller="static"))
+    np.testing.assert_array_equal(legacy.loss, static.loss)
+    np.testing.assert_array_equal(legacy.time, static.time)
+    np.testing.assert_array_equal(legacy.staleness_mean,
+                                  static.staleness_mean)
+    assert legacy.assignments == static.assignments
+    np.testing.assert_array_equal(legacy.buffer_sizes,
+                                  static.buffer_sizes)
+    assert (legacy.buffer_sizes == 3).all()     # never moves
+
+
+# --------------------------------------------------- controller dynamics
+
+def test_staleness_target_moves_sizes_in_the_right_direction():
+    """Unit law: staleness scales ~1/B, so too-stale flushes GROW the
+    task's buffer and fresher-than-target flushes SHRINK it, clipped to
+    [min_size, max_size]; only the flushed task moves."""
+    c = StalenessTargetController(target=1.0, step=2, min_size=2,
+                                  max_size=6, deadband=0.25)
+    c.reset(2, 4)
+
+    def obs(task, stale, flush=1):
+        return FlushObservation(flush=flush, task=task, time=0.0,
+                                staleness_mean=stale, kept=4,
+                                arrivals=np.array([4, 4]),
+                                sizes=c.sizes().copy())
+
+    c.observe(obs(0, 3.0))                       # too stale: grow
+    np.testing.assert_array_equal(c.sizes(), [6, 4])
+    c.observe(obs(0, 3.0))                       # clipped at max
+    np.testing.assert_array_equal(c.sizes(), [6, 4])
+    c.observe(obs(1, 0.0))                       # too fresh: shrink
+    np.testing.assert_array_equal(c.sizes(), [6, 2])
+    c.observe(obs(1, 0.0))                       # clipped at min
+    np.testing.assert_array_equal(c.sizes(), [6, 2])
+    c.observe(obs(1, 1.1))                       # inside deadband: hold
+    np.testing.assert_array_equal(c.sizes(), [6, 2])
+
+
+def test_staleness_target_steers_mean_staleness_toward_setpoint():
+    """Satellite acceptance: on the two-task skewed-speed scenario the
+    controller's late-run mean staleness lands closer to the setpoint
+    than the static baseline's does."""
+    target = 1.5
+    static = run_scenario(skewed_spec(total_arrivals=120))
+    adaptive = run_scenario(skewed_spec(
+        controller="staleness_target",
+        options={"target": target, "min_size": 1, "max_size": 16},
+        total_arrivals=120))
+    # compare the last-third window, after the controller has settled
+    tail = len(static.staleness_mean) // 3
+    err_static = abs(float(np.mean(static.staleness_mean[-tail:]))
+                     - target)
+    tail_a = len(adaptive.staleness_mean) // 3
+    err_adaptive = abs(float(np.mean(adaptive.staleness_mean[-tail_a:]))
+                       - target)
+    assert err_adaptive < err_static
+    # and the sizes actually moved off the static value
+    assert not (adaptive.buffer_sizes == 3).all()
+
+
+def test_arrival_rate_controller_tracks_completion_share():
+    c = ArrivalRateController(min_size=1, max_size=16, warmup=0)
+    c.reset(2, 4)                                # total capacity 8
+    c.observe(FlushObservation(flush=1, task=0, time=0.0,
+                               staleness_mean=0.0, kept=6,
+                               arrivals=np.array([6, 2]),
+                               sizes=c.sizes().copy()))
+    np.testing.assert_array_equal(c.sizes(), [6, 2])
+    # warmup holds the static sizes
+    w = ArrivalRateController(warmup=3)
+    w.reset(2, 4)
+    w.observe(FlushObservation(flush=1, task=0, time=0.0,
+                               staleness_mean=0.0, kept=6,
+                               arrivals=np.array([6, 2]),
+                               sizes=w.sizes().copy()))
+    np.testing.assert_array_equal(w.sizes(), [4, 4])
+
+
+def test_arrival_rate_end_to_end_gives_busy_task_the_bigger_buffer():
+    """The alpha-fair allocator sends most completions to the harder
+    task; arrival_rate must hand that task the bigger buffer and keep the
+    starved task flushing promptly with a small one."""
+    r = run_scenario(skewed_spec(controller="arrival_rate",
+                                 options={"min_size": 1, "max_size": 16},
+                                 total_arrivals=80))
+    hi = int(np.argmax(r.arrivals))
+    lo = 1 - hi
+    assert r.arrivals[hi] > 1.5 * r.arrivals[lo]  # real skew to track
+    final = r.buffer_sizes[-1]
+    assert final[hi] > final[lo]
+
+
+# ------------------------------------------------- serialization / spec
+
+def test_buffer_sizes_serialize_in_run_result_json():
+    """Satellite: per-task sizes are part of the JSON-native result —
+    the (F, S) trajectory plus the final vector."""
+    r = run_scenario(skewed_spec(controller="staleness_target",
+                                 options={"target": 0.5},
+                                 total_arrivals=40))
+    payload = json.loads(json.dumps(r.to_json()))
+    assert payload["final_buffer_sizes"] == \
+        np.asarray(r.buffer_sizes)[-1].tolist()
+    assert payload["buffer_sizes"] == np.asarray(r.buffer_sizes).tolist()
+    # sync results carry None (no buffers to size)
+    sync = skewed_spec()
+    sync.runtime.mode = "sync"
+    sync.runtime.rounds = 2
+    rs = run_scenario(sync)
+    assert rs.to_json()["buffer_sizes"] is None
+    assert rs.to_json()["final_buffer_sizes"] is None
+
+
+def test_spec_roundtrip_and_validation():
+    s = skewed_spec(controller="staleness_target", options={"target": 2.0})
+    back = ScenarioSpec.from_json(s.to_json())
+    assert back == s
+    assert back.runtime.buffer_controller == "staleness_target"
+    # legacy specs (no controller fields) load with the default
+    legacy = ScenarioSpec.from_dict(
+        {"tasks": [{"name": "synth-mnist"}], "runtime": {"mode": "async"}})
+    assert legacy.runtime.buffer_controller is None
+    # unknown keys fail fast at run_scenario time
+    bad = skewed_spec(controller="psychic")
+    with pytest.raises(KeyError, match="buffer_controller"):
+        run_scenario(bad)
+    with pytest.raises(KeyError, match="static"):
+        BUFFER_CONTROLLERS.get("psychic")
+
+
+def test_custom_registered_controller_dispatches():
+    @register_buffer_controller("always_two")
+    class AlwaysTwo(BufferController):
+        def observe(self, obs):
+            self._sizes = np.full(self.n_tasks, 2, np.int64)
+
+    r = run_scenario(skewed_spec(controller="always_two",
+                                 total_arrivals=30))
+    assert (r.buffer_sizes == 2).all()
+    assert get_buffer_controller("always_two").name == "static"  # inherited
+
+
+def test_options_without_controller_name_raises():
+    """Options with no controller named would otherwise die deep in
+    construction with an opaque TypeError from the static base."""
+    spec = skewed_spec(options={"target": 1.5}, total_arrivals=4)
+    with pytest.raises(ValueError, match="without a buffer_controller"):
+        run_scenario(spec)
+    # options a controller's constructor rejects (static takes none,
+    # or a typo'd name) surface the controller + options, not a bare
+    # TypeError
+    bad = skewed_spec(controller="static", options={"min_size": 1},
+                      total_arrivals=4)
+    with pytest.raises(ValueError, match="'static' rejected options"):
+        run_scenario(bad)
+    typo = skewed_spec(controller="staleness_target",
+                       options={"targgget": 2.0}, total_arrivals=4)
+    with pytest.raises(ValueError, match="rejected options"):
+        run_scenario(typo)
+
+
+def test_controller_on_sync_mode_raises():
+    """Sync rounds have no arrival buffers: a sync spec naming a
+    controller is a silent no-op trap, so it is rejected up front."""
+    spec = skewed_spec(controller="staleness_target")
+    spec.runtime.mode = "sync"
+    spec.runtime.rounds = 1
+    with pytest.raises(ValueError, match="only applies to mode='async'"):
+        run_scenario(spec)
+
+
+def test_controller_option_validation():
+    with pytest.raises(ValueError, match="target"):
+        StalenessTargetController(target=-1.0)
+    with pytest.raises(ValueError, match="min_size"):
+        StalenessTargetController(min_size=5, max_size=2)
+    with pytest.raises(ValueError, match="step"):
+        StalenessTargetController(step=0)
+    with pytest.raises(ValueError, match="warmup"):
+        ArrivalRateController(warmup=-1)
+    with pytest.raises(ValueError, match="min_size"):
+        ArrivalRateController(min_size=0)
+
+
+# ------------------------------------- satellite: resolve_buffer_size
+
+def test_resolve_buffer_size_rejects_non_positive():
+    """Satellite: an explicit buffer_size of 0 (or negative) used to
+    silently flush every arrival; now it raises."""
+    from repro.fed import resolve_buffer_size
+
+    for bad in (0, -1, -7):
+        with pytest.raises(ValueError, match="buffer_size must be >= 1"):
+            resolve_buffer_size(bad, "serial")
+    assert resolve_buffer_size(1, "serial") == 1    # boundary is legal
+    assert resolve_buffer_size(None, "serial") == 4  # default untouched
+    # and it propagates out of run_scenario
+    with pytest.raises(ValueError, match="buffer_size must be >= 1"):
+        run_scenario(skewed_spec(buffer_size=0, total_arrivals=4))
