@@ -393,6 +393,107 @@ def exp12_adaptive_buffers(fast=True, seeds=(0, 1),
     return out
 
 
+def _flush_aggregation_timing(fast=True):
+    """Per-flush aggregation wall time, fused one-pass kernel vs the
+    per-leaf unfused reference, for each stateful server optimizer.
+    The cohort is a realistic flush: B buffered deltas over a multi-leaf
+    params pytree (~200k parameters), server state threaded across
+    iterations exactly as the async engine does. On CPU "fused" is the
+    single-jit jnp composition (the repo's interpret-mode rule); on
+    TPU/GPU it is the compiled Pallas kernel."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import get_aggregator
+
+    B = 8
+    shapes = [(784, 128), (128,), (128, 128), (128,), (128, 640), (640,)]
+    iters = 10 if fast else 50
+    rng = np.random.default_rng(0)
+    stacked = {f"p{i}": jnp.asarray(
+        0.01 * rng.standard_normal((B,) + s), jnp.float32)
+        for i, s in enumerate(shapes)}
+    params = {k: leaf[0] for k, leaf in stacked.items()}
+    w = jnp.ones(B, jnp.float32)
+    st = jnp.asarray(rng.integers(0, 4, B), jnp.float32)
+    n_params = int(sum(np.prod(s) for s in shapes))
+    out = {"n_params": n_params, "cohort": B}
+    for mode in ("fedavgm", "fedadam", "fedyogi"):
+        per = {}
+        for fused in (True, False):
+            agg = get_aggregator(mode, {"fused": fused})
+            state = agg.init(params)
+
+            def once(state):
+                upd, state = agg.aggregate_stale(stacked, w, st, 0.5,
+                                                 state,
+                                                 normalizer=w.sum())
+                jax.block_until_ready(upd)
+                return state
+
+            state = once(once(state))           # compile + cache warm-up
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                state = once(state)
+            ms = (time.perf_counter() - t0) / iters * 1e3
+            per["fused_ms" if fused else "unfused_ms"] = ms
+        per["speedup"] = per["unfused_ms"] / max(per["fused_ms"], 1e-9)
+        out[mode] = per
+    return out
+
+
+def exp13_aggregators(fast=True, seeds=(0, 1),
+                      json_path="BENCH_aggregators.json"):
+    """Aggregator headline: the SAME skewed two-task async scenario
+    (bimodal client speeds, spread 8 — exp12's stress case) through
+    run_scenario, differing only in ``runtime.aggregator`` — the
+    bit-exact fedavg baseline vs the stateful server optimizers
+    (fedavgm/fedadam/fedyogi) and the robust rules (fedmedian/
+    trimmed_mean). Reports the fairness columns (final min accuracy
+    across tasks and the accuracy variance) per aggregator, plus the
+    per-flush aggregation wall time of the fused one-pass kernel vs the
+    unfused per-leaf reference. Writes BENCH_aggregators.json for the
+    CI artifact trail."""
+    K = 16
+    arrivals = 120 if fast else 600
+    names = ["synth-mnist", "synth-fmnist"]
+    aggregators = {
+        "fedavg": (None, {}),
+        "fedavgm": ("fedavgm", {"momentum": 0.9, "lr": 0.5}),
+        "fedadam": ("fedadam", {"lr": 0.1}),
+        "fedyogi": ("fedyogi", {"lr": 0.1}),
+        "fedmedian": ("fedmedian", {}),
+        "trimmed_mean": ("trimmed_mean", {"trim": 0.2}),
+    }
+    out = {}
+    for label, (name, opts) in aggregators.items():
+        mins, variances = [], []
+        for seed in seeds:
+            spec = _scenario(names, "fedfair", 0, seed,
+                             n_range=(60, 90), n_clients=K, tau=3,
+                             mode="async", total_arrivals=arrivals,
+                             buffer_size=3, beta=0.5,
+                             aggregator=name,
+                             aggregator_options=dict(opts),
+                             clients_kw={"speed_profile": "bimodal",
+                                         "speed_spread": 8.0})
+            h = run_scenario(spec)
+            mins.append(h.min_acc[-1])
+            variances.append(h.var_acc[-1])
+        out[label] = {
+            "min_acc": float(np.mean(mins)),
+            "var_acc": float(np.mean(variances)),
+        }
+    out["flush_timing"] = _flush_aggregation_timing(fast)
+    out["config"] = {"clients": K, "arrivals": arrivals,
+                     "buffer_size": 3, "beta": 0.5,
+                     "seeds": list(seeds)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out
+
+
 def exp10_backend_scaling(fast=True, json_path="BENCH_backends.json"):
     """ExecutionBackend headline: wall-time per round, serial vs vmap vs
     sharded, as the cohort grows — the SAME spec through run_scenario,

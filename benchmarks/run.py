@@ -62,6 +62,7 @@ def experiment_specs():
         ("exp10_backend_scaling", E.exp10_backend_scaling),
         ("exp11_policy_comparison", E.exp11_policy_comparison),
         ("exp12_adaptive_buffers", E.exp12_adaptive_buffers),
+        ("exp13_aggregators", E.exp13_aggregators),
     ]
 
 

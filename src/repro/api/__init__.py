@@ -17,18 +17,27 @@ updates runs (serial / vmap / sharded) — is a registry axis
 core loop itself: stateful round-by-round ``AllocationPolicy`` objects
 and per-round re-auctioning ``IncentiveMechanism`` objects
 (``repro.api.policy``, ``ScenarioSpec.policy`` / ``AuctionSpec.incentive``).
-The async engine's per-task buffer sizing is the newest axis: stateful
+The async engine's per-task buffer sizing is its own axis: stateful
 ``BufferController`` objects (``@register_buffer_controller``,
 ``repro.api.buffer``, ``RuntimeSpec.buffer_controller``) observe each
 flush and emit per-task buffer sizes, and the engine checkpoints its
 COMPLETE mid-run state (event queue, buffers, RNG streams, policy /
 incentive / controller state) through ``repro.checkpoint`` so async
-resume is event-for-event exact.
+resume is event-for-event exact. The server FOLD is the fifth axis:
+``Aggregator`` objects (``@register_aggregator``,
+``repro.api.aggregator``, ``RuntimeSpec.aggregator``) replace the
+hard-wired weighted mean with stateful server optimizers (fedavgm /
+fedadam / fedyogi) or robust rules (fedmedian / trimmed_mean), with
+their per-task moments threaded through the same checkpoints.
+
+See docs/ARCHITECTURE.md for the full composition chain and a plugin
+recipe per axis; docs/REGISTRY.md for every registered key.
 """
 
 from __future__ import annotations
 
 from repro.api.registry import (  # noqa: F401
+    AGGREGATORS,
     ALLOCATORS,
     ARRIVAL_PROCESSES,
     AUCTIONS,
@@ -37,6 +46,7 @@ from repro.api.registry import (  # noqa: F401
     INCENTIVES,
     POLICIES,
     Registry,
+    register_aggregator,
     register_allocator,
     register_arrival_process,
     register_auction,
@@ -45,6 +55,17 @@ from repro.api.registry import (  # noqa: F401
     register_incentive,
     register_policy,
     register_task_family,
+)
+from repro.api.aggregator import (  # noqa: F401
+    Aggregator,
+    FedAdam,
+    FedAvg,
+    FedAvgM,
+    FedMedian,
+    FedYogi,
+    TrimmedMean,
+    aggregator_from_config,
+    get_aggregator,
 )
 from repro.api.backend import (  # noqa: F401
     ClientBatch,

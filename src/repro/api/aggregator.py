@@ -1,0 +1,478 @@
+"""Pluggable server-side aggregation rules — the fifth registry axis.
+
+Every engine in this repo used to hard-wire (staleness-weighted) FedAvg at
+the aggregation step, so fairness-aware server optimizers and robust
+aggregation — the natural extension of FedFairMMFL to heterogeneous-
+difficulty tasks — could not even be expressed. An ``Aggregator`` makes
+the fold a registry entry (``AGGREGATORS`` / ``@register_aggregator``),
+selected by ``RuntimeSpec.aggregator(+_options)`` / ``--aggregator`` and
+dispatched by all three engines (``fed/trainer.py``, the ArchSyncEngine
+round loop, and the async flush path):
+
+  * ``fedavg``       — the bit-exact legacy reference (delegates the
+    weighted reduce to the ExecutionBackend, i.e. the Pallas fedavg
+    kernel on compiled platforms).
+  * ``fedavgm``      — server momentum (FedOpt, Reddi et al. 2021).
+  * ``fedadam``      — server Adam (v0 = eps^2, no bias correction).
+  * ``fedyogi``      — server Yogi (sign-controlled second moment).
+  * ``fedmedian``    — coordinate-wise median (byzantine-robust;
+    ignores aggregation weights).
+  * ``trimmed_mean`` — coordinate-wise trimmed mean (robust; ignores
+    aggregation weights).
+
+Contract
+--------
+Instances are CONFIG; the per-task server state (optimizer moments) is
+held by the engine and threaded through every call:
+
+    state = agg.init(task_params)            # None for stateless rules
+    update, state = agg.aggregate(stacked_deltas, weights, state,
+                                  normalizer=None)
+
+``stacked_deltas`` is a pytree with a leading cohort axis of client
+DELTAS from the task's global params; ``update`` mirrors the params and
+the engine applies ``params += server_lr * update``. Two entry points
+adapt the contract to the engines' native shapes:
+
+  * ``aggregate_params`` — the sync trainers' form (cohorts of ABSOLUTE
+    client params): generic rule delta-ises, aggregates, steps; the
+    ``fedavg`` override is the direct weighted mean of the absolute
+    params, which is the exact legacy float trace.
+  * ``aggregate_stale`` — the async flush (FedAST): staleness-discount
+    the weights, normalise by the UNDISCOUNTED sum, aggregate. The
+    stateful optimizers FUSE discount + reduce + moment update into one
+    pass over the stacked deltas (``kernels/fedavg.py``) on compiled
+    platforms; on CPU the single-jit jnp composition is both the oracle
+    and the fast path.
+
+``state_dict``/``load_state`` are JSON-native CONFIG records (name +
+options) that ride in the engines' checkpoint payloads; the server-state
+pytrees themselves travel through ``checkpoint.save_pytree`` alongside
+the model params (see docs/CHECKPOINTS.md). ``load_state`` validates
+that a resumed run uses the same aggregator + options — resuming under a
+different rule would silently reinterpret the saved moments.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import AGGREGATORS, register_aggregator
+
+
+def _weighted_mean_f32(stacked, weights, normalizer=None):
+    """f32 weighted mean over the leading cohort axis of every leaf
+    (``backend.aggregate`` semantics, kept in f32 so optimizer moments
+    never round-trip through a low-precision delta dtype)."""
+    w = jnp.asarray(weights, jnp.float32)
+    denom = w.sum() if normalizer is None else jnp.asarray(normalizer, jnp.float32)
+    norm = w / jnp.maximum(denom, 1e-12)
+    return jax.tree.map(
+        lambda leaf: jnp.tensordot(norm, leaf.astype(jnp.float32), axes=(0, 0)),
+        stacked)
+
+
+def _cast_like(update, stacked):
+    """Cast an f32 update pytree back to the cohort leaf dtypes."""
+    return jax.tree.map(lambda u, leaf: u.astype(leaf.dtype), update, stacked)
+
+
+class Aggregator:
+    """Server aggregation protocol; see the module docstring for the
+    contract. The base class implements the generic delta-space path —
+    subclasses override ``aggregate`` (and optionally the two engine
+    entry points) and declare their options in ``self._options``."""
+
+    name = "base"
+    backend = None  # ExecutionBackend; set by get_aggregator, lazily "serial"
+
+    def __init__(self):
+        self._options: Dict[str, Any] = {}
+
+    def _agg_backend(self):
+        if self.backend is None:
+            from repro.api.backend import get_backend
+
+            self.backend = get_backend("serial")
+        return self.backend
+
+    # -- protocol ----------------------------------------------------------
+
+    def init(self, task_params) -> Optional[Any]:
+        """Fresh per-task server state (None for stateless rules)."""
+        del task_params
+        return None
+
+    def aggregate(self, stacked_deltas, weights, server_state,
+                  normalizer=None) -> Tuple[Any, Any]:
+        """Fold a stacked cohort of deltas into one params-shaped update.
+        Returns ``(update, new_server_state)``."""
+        raise NotImplementedError
+
+    def aggregate_params(self, params, stacked_params, weights,
+                         server_state, normalizer=None) -> Tuple[Any, Any]:
+        """Sync-trainer entry point: cohorts carry ABSOLUTE client
+        params. Generic rule: delta-ise against the current globals,
+        aggregate in delta space, step. Returns ``(new_params, state)``."""
+        deltas = jax.tree.map(lambda c, p: c - p, stacked_params, params)
+        update, server_state = self.aggregate(deltas, weights, server_state,
+                                              normalizer=normalizer)
+        new_params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, update)
+        return new_params, server_state
+
+    def aggregate_stale(self, stacked_deltas, weights, staleness, beta,
+                        server_state, normalizer=None) -> Tuple[Any, Any]:
+        """Async flush entry point (FedAST): discount each update's
+        weight by ``(1+staleness)^-beta`` and normalise by the
+        UNDISCOUNTED weight sum (stale work nudges, never overwrites)."""
+        from repro.fed.server import staleness_weights
+
+        w = jnp.asarray(weights, jnp.float32)
+        disc = staleness_weights(w, staleness, beta)
+        norm = w.sum() if normalizer is None else normalizer
+        return self.aggregate(stacked_deltas, disc, server_state,
+                              normalizer=norm)
+
+    # -- checkpointing -----------------------------------------------------
+
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-native CONFIG record ``{"name", "options"}``. The
+        per-task server-state pytrees are checkpointed alongside the
+        model params (numpy substrate), not here."""
+        return {"name": self.name, "options": dict(self._options)}
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        """Validate a checkpointed config against this instance: resuming
+        under a DIFFERENT aggregator (or options) would silently
+        reinterpret the saved server state, so mismatches raise."""
+        got = state.get("name", self.name)
+        if got != self.name:
+            raise ValueError(
+                f"checkpoint was written by aggregator {got!r}; this run "
+                f"uses {self.name!r} — resume with the same aggregator "
+                "or start a fresh checkpoint directory")
+        opts = state.get("options", {})
+        if opts != self._options:
+            raise ValueError(
+                f"checkpoint aggregator options {opts!r} do not match "
+                f"this run's {self._options!r}; resume with identical "
+                "options")
+
+
+@register_aggregator("fedavg")
+class FedAvg(Aggregator):
+    """Plain (staleness-discounted) weighted mean — the bit-exact legacy
+    reference. Stateless; delegates the reduce to the execution backend
+    (the Pallas fedavg kernel on compiled platforms)."""
+
+    name = "fedavg"
+
+    def aggregate(self, stacked_deltas, weights, server_state,
+                  normalizer=None):
+        agg = self._agg_backend().aggregate(stacked_deltas, weights,
+                                            normalizer=normalizer)
+        return agg, server_state
+
+    def aggregate_params(self, params, stacked_params, weights,
+                         server_state, normalizer=None):
+        # direct weighted mean of the ABSOLUTE cohort params: for a
+        # normalised linear rule this equals the delta form in real
+        # arithmetic, and THIS operation order is the legacy float trace
+        # the bit-exactness gates (exp9 / BENCH_async.json) pin down
+        del params
+        agg = self._agg_backend().aggregate(stacked_params, weights,
+                                            normalizer=normalizer)
+        return agg, server_state
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _fused_flush(stacked_deltas, w, staleness, m_tree, v_tree, beta, norm,
+                 lr, beta1, beta2, eps, *, mode):
+    """One jitted program for the whole fused flush: ravel the cohort
+    pytree, run the one-pass kernel, unravel update + moments. Keeping
+    the ravel/unravel INSIDE the jit is what makes the fused path a
+    single fused program rather than eager pytree plumbing around it
+    (``v_tree=None`` for momentum-only modes is static per treedef)."""
+    from jax.flatten_util import ravel_pytree
+
+    from repro.kernels import fused_aggregate
+
+    flat = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked_deltas)
+    _, unravel = ravel_pytree(
+        jax.tree.map(lambda leaf: leaf[0], stacked_deltas))
+    m0, unravel_state = ravel_pytree(m_tree)
+    v0 = (ravel_pytree(v_tree)[0] if v_tree is not None
+          else jnp.zeros_like(m0))
+    upd, m1, v1 = fused_aggregate(
+        flat, w, staleness, m0, v0, mode=mode, beta=beta, normalizer=norm,
+        lr=lr, beta1=beta1, beta2=beta2, eps=eps)
+    return unravel(upd), unravel_state(m1), unravel_state(v1)
+
+
+class _ServerOptAggregator(Aggregator):
+    """Shared machinery for the stateful server optimizers (FedOpt,
+    Reddi et al. 2021, arXiv:2003.00295). Server state is an f32 pytree
+    of moments mirroring the params; ``aggregate`` is the per-leaf jnp
+    reference, ``aggregate_stale`` may dispatch the fused one-pass
+    kernel (``fused=None`` auto-selects: compiled Pallas on TPU/GPU,
+    single-jit jnp composition on CPU)."""
+
+    mode = ""  # kernels/fedavg.py fused-kernel mode key
+
+    def __init__(self, fused: Optional[bool] = None):
+        super().__init__()
+        self.fused = fused
+
+    def _scalars(self) -> Dict[str, float]:
+        """lr/beta1/beta2/eps for the fused kernel (subclasses map their
+        options onto these; unused slots are inert)."""
+        raise NotImplementedError
+
+    def _opt_update(self, server_state, d) -> Tuple[Any, Any]:
+        """One f32 moment update from the aggregated delta ``d``.
+        Returns ``(new_state, update)``."""
+        raise NotImplementedError
+
+    def aggregate(self, stacked_deltas, weights, server_state,
+                  normalizer=None):
+        d = _weighted_mean_f32(stacked_deltas, weights, normalizer)
+        server_state, update = self._opt_update(server_state, d)
+        return _cast_like(update, stacked_deltas), server_state
+
+    def aggregate_stale(self, stacked_deltas, weights, staleness, beta,
+                        server_state, normalizer=None):
+        fused = self.fused
+        if fused is None:
+            fused = jax.default_backend() != "cpu"
+        if not fused:
+            return super().aggregate_stale(stacked_deltas, weights,
+                                           staleness, beta, server_state,
+                                           normalizer=normalizer)
+        w = jnp.asarray(weights, jnp.float32)
+        norm = w.sum() if normalizer is None else normalizer
+        f32 = jnp.float32
+        sc = self._scalars()
+        upd, m1, v1 = _fused_flush(
+            stacked_deltas, w, jnp.asarray(staleness, f32),
+            server_state["m"], server_state.get("v"),
+            jnp.asarray(beta, f32), jnp.asarray(norm, f32),
+            jnp.asarray(sc["lr"], f32), jnp.asarray(sc["beta1"], f32),
+            jnp.asarray(sc["beta2"], f32), jnp.asarray(sc["eps"], f32),
+            mode=self.mode)
+        new_state = {"m": m1}
+        if "v" in server_state:
+            new_state["v"] = v1
+        return upd, new_state
+
+
+@register_aggregator("fedavgm")
+class FedAvgM(_ServerOptAggregator):
+    """Server momentum: m <- momentum*m + d; update = lr*m (FedOpt)."""
+
+    name = "fedavgm"
+    mode = "fedavgm"
+
+    def __init__(self, momentum: float = 0.9, lr: float = 1.0,
+                 fused: Optional[bool] = None):
+        super().__init__(fused=fused)
+        if not 0.0 <= momentum < 1.0:
+            raise ValueError(
+                f"fedavgm: momentum must be in [0, 1), got {momentum}")
+        if lr <= 0:
+            raise ValueError(f"fedavgm: lr must be > 0, got {lr}")
+        self.momentum = float(momentum)
+        self.lr = float(lr)
+        self._options = {"momentum": self.momentum, "lr": self.lr,
+                         "fused": self.fused}
+
+    def init(self, task_params):
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), task_params)}
+
+    def _scalars(self):
+        return {"lr": self.lr, "beta1": self.momentum, "beta2": 0.0,
+                "eps": 0.0}
+
+    def _opt_update(self, server_state, d):
+        m = jax.tree.map(lambda m_, d_: self.momentum * m_ + d_,
+                         server_state["m"], d)
+        upd = jax.tree.map(lambda m_: self.lr * m_, m)
+        return {"m": m}, upd
+
+
+class _AdaptiveServerOpt(_ServerOptAggregator):
+    """Shared Adam/Yogi machinery: first+second moments, v0 = eps^2, no
+    bias correction (the FedOpt formulation)."""
+
+    def __init__(self, lr: float = 1.0, beta1: float = 0.9,
+                 beta2: float = 0.99, eps: float = 1e-3,
+                 fused: Optional[bool] = None):
+        super().__init__(fused=fused)
+        if lr <= 0:
+            raise ValueError(f"{self.name}: lr must be > 0, got {lr}")
+        for nm, b in (("beta1", beta1), ("beta2", beta2)):
+            if not 0.0 <= b < 1.0:
+                raise ValueError(
+                    f"{self.name}: {nm} must be in [0, 1), got {b}")
+        if eps <= 0:
+            raise ValueError(f"{self.name}: eps must be > 0, got {eps}")
+        self.lr = float(lr)
+        self.beta1 = float(beta1)
+        self.beta2 = float(beta2)
+        self.eps = float(eps)
+        self._options = {"lr": self.lr, "beta1": self.beta1,
+                         "beta2": self.beta2, "eps": self.eps,
+                         "fused": self.fused}
+
+    def init(self, task_params):
+        return {
+            "m": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), task_params),
+            "v": jax.tree.map(
+                lambda p: jnp.full(p.shape, self.eps ** 2, jnp.float32),
+                task_params),
+        }
+
+    def _scalars(self):
+        return {"lr": self.lr, "beta1": self.beta1, "beta2": self.beta2,
+                "eps": self.eps}
+
+    def _second_moment(self, v, d2):
+        raise NotImplementedError
+
+    def _opt_update(self, server_state, d):
+        b1 = self.beta1
+        m = jax.tree.map(lambda m_, d_: b1 * m_ + (1.0 - b1) * d_,
+                         server_state["m"], d)
+        v = jax.tree.map(lambda v_, d_: self._second_moment(v_, d_ * d_),
+                         server_state["v"], d)
+        upd = jax.tree.map(
+            lambda m_, v_: self.lr * m_ / (jnp.sqrt(v_) + self.eps), m, v)
+        return {"m": m, "v": v}, upd
+
+
+@register_aggregator("fedadam")
+class FedAdam(_AdaptiveServerOpt):
+    """Server Adam: v <- beta2*v + (1-beta2)*d^2 (FedOpt)."""
+
+    name = "fedadam"
+    mode = "fedadam"
+
+    def _second_moment(self, v, d2):
+        return self.beta2 * v + (1.0 - self.beta2) * d2
+
+
+@register_aggregator("fedyogi")
+class FedYogi(_AdaptiveServerOpt):
+    """Server Yogi: v <- v - (1-beta2)*d^2*sign(v - d^2) — additive
+    second-moment control, less forgetful than Adam under sparse or
+    bursty (async) update streams."""
+
+    name = "fedyogi"
+    mode = "fedyogi"
+
+    def _second_moment(self, v, d2):
+        return v - (1.0 - self.beta2) * d2 * jnp.sign(v - d2)
+
+
+@register_aggregator("fedmedian")
+class FedMedian(Aggregator):
+    """Coordinate-wise median over the cohort axis (byzantine-robust).
+    Aggregation weights and staleness discounts are IGNORED — the median
+    is an order statistic; a single corrupted client delta moves the
+    fold by at most one rank instead of proportionally to its norm."""
+
+    name = "fedmedian"
+
+    def aggregate(self, stacked_deltas, weights, server_state,
+                  normalizer=None):
+        del weights, normalizer
+        upd = jax.tree.map(
+            lambda leaf: jnp.median(leaf.astype(jnp.float32),
+                                    axis=0).astype(leaf.dtype),
+            stacked_deltas)
+        return upd, server_state
+
+
+@register_aggregator("trimmed_mean")
+class TrimmedMean(Aggregator):
+    """Coordinate-wise trimmed mean: drop the ``trim`` fraction of
+    extreme values at each end of the cohort axis, average the rest.
+    Weights are ignored (robust order-statistic rule, like fedmedian);
+    ``trim=0`` degenerates to the UNWEIGHTED mean."""
+
+    name = "trimmed_mean"
+
+    def __init__(self, trim: float = 0.1):
+        super().__init__()
+        if not 0.0 <= trim < 0.5:
+            raise ValueError(
+                f"trimmed_mean: trim must be in [0, 0.5), got {trim}")
+        self.trim = float(trim)
+        self._options = {"trim": self.trim}
+
+    def aggregate(self, stacked_deltas, weights, server_state,
+                  normalizer=None):
+        del weights, normalizer
+
+        def tm(leaf):
+            k = int(self.trim * leaf.shape[0])
+            x = jnp.sort(leaf.astype(jnp.float32), axis=0)
+            if k:
+                x = x[k:leaf.shape[0] - k]
+            return x.mean(axis=0).astype(leaf.dtype)
+
+        return jax.tree.map(tm, stacked_deltas), server_state
+
+
+# ------------------------------------------------------------ construction
+
+
+def get_aggregator(name: str, options: Optional[Dict[str, Any]] = None,
+                   backend=None) -> Aggregator:
+    """Resolve + construct an aggregator from its registry key. Option
+    errors surface as ValueError naming the aggregator and options (not
+    a bare constructor TypeError). ``backend`` is the ExecutionBackend
+    the instance delegates weighted reduces to (lazily "serial")."""
+    cls = AGGREGATORS.get(name)
+    try:
+        agg = cls(**(options or {}))
+    except TypeError as e:
+        raise ValueError(
+            f"aggregator {name!r} rejected options {options!r}: {e}"
+        ) from None
+    agg.backend = backend
+    return agg
+
+
+def aggregator_from_config(name: Optional[str],
+                           options: Optional[Dict[str, Any]],
+                           backend=None) -> Aggregator:
+    """Engine-side construction: ``None`` selects the bit-exact
+    ``fedavg`` default; options without a name are rejected (the
+    buffer-controller contract)."""
+    if name is None and options:
+        raise ValueError(
+            "aggregator_options were given without an aggregator; name "
+            "one (e.g. 'fedadam') or drop the options")
+    return get_aggregator(name or "fedavg", options or {}, backend=backend)
+
+
+__all__ = [
+    "AGGREGATORS",
+    "Aggregator",
+    "FedAdam",
+    "FedAvg",
+    "FedAvgM",
+    "FedMedian",
+    "FedYogi",
+    "TrimmedMean",
+    "aggregator_from_config",
+    "get_aggregator",
+    "register_aggregator",
+]

@@ -300,7 +300,10 @@ def _pallas_aggregate(stacked_updates, norm):
     flat = jax.vmap(lambda p: ravel_pytree(p)[0])(stacked_updates)
     template = jax.tree.map(lambda leaf: leaf[0], stacked_updates)
     _, unravel = ravel_pytree(template)
-    agg = fedavg_aggregate(flat, norm.astype(flat.dtype))
+    # keep the f32 weights as-is: the kernel promotes mixed-precision
+    # inputs to the common dtype (demoting normalised weights to a bf16
+    # cohort dtype, the pre-fix behaviour, rounds them before the matvec)
+    agg = fedavg_aggregate(flat, norm)
     return jax.tree.map(lambda ref, new: jnp.asarray(new, ref.dtype), template, unravel(agg))
 
 

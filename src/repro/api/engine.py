@@ -30,6 +30,7 @@ from repro.api.policy import (  # noqa: F401  (re-exported legacy names)
     stacked_delta_norms,
 )
 from repro.api.registry import (
+    AGGREGATORS,
     ALLOCATORS,
     ARRIVAL_PROCESSES,
     BACKENDS,
@@ -186,6 +187,8 @@ def _train_config(spec: ScenarioSpec) -> TrainConfig:
         deep_depth=rt.deep_depth,
         backend=rt.backend,
         policy=policy_from_spec(spec.policy, al.strategy),
+        aggregator=rt.aggregator,
+        aggregator_options=dict(rt.aggregator_options),
     )
 
 
@@ -206,6 +209,8 @@ def _async_config(spec: ScenarioSpec) -> AsyncConfig:
         max_staleness=rt.max_staleness,
         buffer_controller=rt.buffer_controller,
         buffer_controller_options=dict(rt.buffer_controller_options),
+        aggregator=rt.aggregator,
+        aggregator_options=dict(rt.aggregator_options),
         checkpoint_dir=rt.checkpoint_dir,
         checkpoint_every=rt.checkpoint_every,
         resume=rt.resume,
@@ -396,6 +401,7 @@ class ArchSyncEngine:
     """
 
     def __init__(self, spec: ScenarioSpec, tasks, data, eligibility=None, incentive=None):
+        from repro.api.aggregator import aggregator_from_config
         from repro.core.mmfl import MMFLCoordinator
         from repro.launch.train import make_arch_eval
 
@@ -404,6 +410,17 @@ class ArchSyncEngine:
         self.data = data
         self.names = [t.name for t in spec.tasks]
         self.backend = get_backend(spec.runtime.backend)
+        # server aggregation rule; applies to tau>1 (true FedAvg) tasks —
+        # tau<=1 tasks are the fused weighted-gradient server step, whose
+        # adamw update is baked into the cohort itself
+        self.aggregator = aggregator_from_config(
+            spec.runtime.aggregator, spec.runtime.aggregator_options,
+            backend=self.backend,
+        )
+        self._server_state = {
+            a: (self.aggregator.init(tasks[a]["params"]) if tasks[a]["tau"] > 1 else None)
+            for a in self.names
+        }
         self._eval_acc = {a: make_arch_eval(tasks[a], data[a])[1] for a in self.names}
         self.coord = MMFLCoordinator(
             task_names=self.names,
@@ -458,8 +475,11 @@ class ArchSyncEngine:
         norm = None
         if want_norm:
             norm = float(stacked_delta_norms(res.updates, t["params"]).mean())
-        t["params"] = self.backend.aggregate(
-            res.updates, w_rows, normalizer=jnp.maximum(w_rows.sum(), 1e-9)
+        # pluggable server fold ("fedavg" = the direct backend weighted
+        # mean over absolute cohort params, the bit-exact legacy trace)
+        t["params"], self._server_state[name] = self.aggregator.aggregate_params(
+            t["params"], res.updates, w_rows, self._server_state[name],
+            normalizer=jnp.maximum(w_rows.sum(), 1e-9)
         )
         return float(res.losses.mean()), norm
 
@@ -485,10 +505,17 @@ class ArchSyncEngine:
                 import jax
                 import jax.numpy as jnp
 
+                if "aggregator" in coord_state:
+                    # raises on aggregator/options mismatch — the saved
+                    # server moments would be silently reinterpreted
+                    self.aggregator.load_state(coord_state["aggregator"])
                 for a in self.names:
                     if a in saved:
                         self.tasks[a]["params"] = jax.tree.map(jnp.asarray, saved[a]["params"])
                         self.tasks[a]["opt"] = jax.tree.map(jnp.asarray, saved[a]["opt"])
+                        srv = saved[a].get("server_state")
+                        if srv is not None:
+                            self._server_state[a] = jax.tree.map(jnp.asarray, srv)
                 if "coordinator" in coord_state:
                     self.coord.load_state(coord_state["coordinator"])
                     rng.bit_generator.state = coord_state["data_rng"]
@@ -567,9 +594,15 @@ class ArchSyncEngine:
                         "params": self.tasks[a]["params"],
                         "opt": self.tasks[a]["opt"],
                     }
+                    # optimizer moments of a stateful aggregator ride
+                    # with the model pytrees; omitted for stateless
+                    # rules so fedavg keeps the pre-aggregator layout
+                    if self._server_state[a] is not None:
+                        task_state[a]["server_state"] = self._server_state[a]
                 coord_payload = {
                     "coordinator": self.coord.state_dict(),
                     "data_rng": rng.bit_generator.state,
+                    "aggregator": self.aggregator.state_dict(),
                 }
                 if self.incentive is not None:
                     coord_payload["incentive"] = self.incentive.state_dict()
@@ -636,6 +669,14 @@ def run_scenario(spec: ScenarioSpec, verbose: bool = False) -> RunResult:
                 "mode='async' (sync rounds have no arrival buffers); "
                 "drop it or switch the runtime mode"
             )
+    if spec.runtime.aggregator is not None:
+        AGGREGATORS.get(spec.runtime.aggregator)
+    elif spec.runtime.aggregator_options:
+        raise ValueError(
+            "runtime.aggregator_options were given without a "
+            "runtime.aggregator; name one (e.g. 'fedadam') or drop the "
+            "options"
+        )
     auction_summary = None
     eligibility = None
     incentive = None

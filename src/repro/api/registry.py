@@ -73,6 +73,10 @@ INCENTIVES = Registry("incentive")
 # controllers observe each flush's staleness/arrival feedback and emit
 # per-task buffer sizes
 BUFFER_CONTROLLERS = Registry("buffer_controller")
+# server-side aggregation rules (repro.api.aggregator): how a stacked
+# cohort of client deltas folds into the global model — plain/robust
+# weighted reductions and stateful server optimizers (FedAvgM/FedAdam/...)
+AGGREGATORS = Registry("aggregator")
 
 register_allocator = ALLOCATORS.register
 register_arrival_process = ARRIVAL_PROCESSES.register
@@ -82,3 +86,126 @@ register_backend = BACKENDS.register
 register_policy = POLICIES.register
 register_incentive = INCENTIVES.register
 register_buffer_controller = BUFFER_CONTROLLERS.register
+register_aggregator = AGGREGATORS.register
+
+
+# ------------------------------------------------------- docs generation
+
+def _entry_options(obj: Any) -> str:
+    """Best-effort constructor-option summary for one registered object:
+    ``name=default`` pairs from the signature (classes use ``__init__``),
+    or ``—`` for option-free entries (enum members, bare callables)."""
+    import enum
+    import inspect
+
+    if isinstance(obj, enum.Enum):
+        return "—"
+    try:
+        sig = inspect.signature(obj)
+    except (TypeError, ValueError):
+        return "—"
+    parts = []
+    for p in sig.parameters.values():
+        if p.name in ("self", "args", "kwargs"):
+            continue
+        if p.kind in (p.VAR_POSITIONAL, p.VAR_KEYWORD):
+            continue
+        if p.default is p.empty:
+            parts.append(f"`{p.name}`")
+        else:
+            parts.append(f"`{p.name}={p.default!r}`")
+    return ", ".join(parts) or "—"
+
+
+def _entry_summary(obj: Any) -> str:
+    """First docstring line of a registered object (empty if none).
+    ``functools.partial`` wrappers unwrap to their target; enum members
+    (whose ``__doc__`` is the class boilerplate) show member identity."""
+    import enum
+    import functools
+
+    while isinstance(obj, functools.partial):
+        obj = obj.func
+    if isinstance(obj, enum.Enum):
+        return f"`{type(obj).__name__}.{obj.name}` enum member"
+    doc = getattr(obj, "__doc__", None) or ""
+    first = doc.strip().splitlines()[0].strip() if doc.strip() else ""
+    return first.replace("|", "\\|")
+
+
+def dump_markdown() -> str:
+    """Render every populated registry as a markdown reference.
+
+    Deterministic (registries and keys are iterated sorted), so
+    ``docs/REGISTRY.md`` can be regenerated and diffed in CI — the doc
+    cannot drift from the live registries. Importing ``repro.api`` (and
+    the lazily-populated task families via ``repro.api.engine``) is the
+    caller's job; see ``python -m repro.api.registry --dump-markdown``.
+    """
+    registries = [
+        ("allocator", ALLOCATORS),
+        ("arrival_process", ARRIVAL_PROCESSES),
+        ("auction", AUCTIONS),
+        ("task_family", TASK_FAMILIES),
+        ("backend", BACKENDS),
+        ("policy", POLICIES),
+        ("incentive", INCENTIVES),
+        ("buffer_controller", BUFFER_CONTROLLERS),
+        ("aggregator", AGGREGATORS),
+    ]
+    lines = [
+        "# Registry reference",
+        "",
+        "<!-- GENERATED FILE — do not edit by hand. Regenerate with: -->",
+        "<!--   PYTHONPATH=src python -m repro.api.registry "
+        "--dump-markdown > docs/REGISTRY.md -->",
+        "",
+        "Every pluggable axis of an MMFL scenario is a string-keyed",
+        "registry (`repro/api/registry.py`); specs select entries by key.",
+        "See `docs/ARCHITECTURE.md` for how the axes compose and how to",
+        "register a plugin on each one.",
+        "",
+    ]
+    for kind, reg in registries:
+        lines.append(f"## {kind} (`register_{kind}`)")
+        lines.append("")
+        lines.append("| key | options | summary |")
+        lines.append("|---|---|---|")
+        for name in reg.names():
+            obj = reg._items[name]
+            lines.append(
+                f"| `{name}` | {_entry_options(obj)} | {_entry_summary(obj)} |"
+            )
+        lines.append("")
+    return "\n".join(lines)
+
+
+def _main(argv: List[str]) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="python -m repro.api.registry")
+    ap.add_argument(
+        "--dump-markdown",
+        action="store_true",
+        help="print the generated registry reference (docs/REGISTRY.md)",
+    )
+    args = ap.parse_args(argv)
+    if not args.dump_markdown:
+        ap.error("nothing to do; pass --dump-markdown")
+    # populate every registry: repro.api registers the spec-level axes,
+    # repro.api.engine the task families (lazy in the package __init__).
+    # Dump from the CANONICAL module instance — under ``python -m`` this
+    # file runs as ``__main__``, whose module-level registries are fresh
+    # copies the registrations never touched.
+    import repro.api  # noqa: F401
+    import repro.api.engine  # noqa: F401
+    from repro.api import registry as canonical
+
+    print(canonical.dump_markdown())
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via CI drift check
+    import sys
+
+    sys.exit(_main(sys.argv[1:]))

@@ -140,6 +140,13 @@ class RuntimeSpec:
     # keeps the bit-exact legacy behaviour (the "static" controller).
     buffer_controller: Optional[str] = None
     buffer_controller_options: Dict[str, Any] = field(default_factory=dict)
+    # server aggregation rule (AGGREGATORS registry key: fedavg | fedavgm
+    # | fedadam | fedyogi | fedmedian | trimmed_mean | registered),
+    # applied by BOTH runtimes. None keeps the bit-exact legacy weighted
+    # mean (the "fedavg" aggregator); options are constructor kwargs,
+    # e.g. {"lr": 0.1, "eps": 1e-3} for fedadam.
+    aggregator: Optional[str] = None
+    aggregator_options: Dict[str, Any] = field(default_factory=dict)
     # checkpoint/resume — mid-run full-state checkpoints for BOTH engines:
     # the arch sync round loop (every `checkpoint_every` rounds) and the
     # async event engine (every `checkpoint_every` flushes; the whole

@@ -29,6 +29,13 @@ Tasks are pluggable via the ``AsyncTask`` adapter protocol, so the same
 engine drives the synthetic FedTask MLPs here and the multi-architecture
 LM tasks in ``launch/train.py --async``.
 
+The server FOLD itself is pluggable (``api.aggregator``, selected by
+``AsyncConfig.aggregator``): "fedavg" keeps the staleness-weighted mean
+above bit-exactly, while stateful server optimizers (fedavgm / fedadam /
+fedyogi) and robust rules (fedmedian / trimmed_mean) replace it — the
+optimizer moments fuse with the discount + reduce into one Pallas pass
+on compiled platforms (``kernels/fedavg.py``).
+
 Two state-management seams close the loop for LONG runs:
 
   - per-task ADAPTIVE buffer sizes: a pluggable ``BufferController``
@@ -51,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.aggregator import aggregator_from_config
 from repro.api.arrivals import get_arrival_process
 from repro.api.backend import ClientBatch, CohortTask, get_backend
 from repro.api.buffer import FlushObservation, get_buffer_controller
@@ -60,7 +68,6 @@ from repro.core.allocation import AllocationStrategy
 from repro.core.mmfl import MMFLCoordinator
 from repro.fed.client import accuracy
 from repro.fed.data import FedTask
-from repro.fed.server import staleness_weights
 from repro.fed.trainer import (cohort_update, fed_client_batch,
                                fed_local_fn, init_task_model,
                                task_round_key)
@@ -93,6 +100,10 @@ class AsyncConfig:
     # None selects "static" — the bit-exact legacy single-knob behaviour
     buffer_controller: Optional[str] = None
     buffer_controller_options: dict = field(default_factory=dict)
+    # server aggregation rule (api.aggregator AGGREGATORS key); None
+    # selects "fedavg" — the bit-exact legacy staleness-weighted mean
+    aggregator: Optional[str] = None
+    aggregator_options: dict = field(default_factory=dict)
     # mid-run checkpointing: every `checkpoint_every` FLUSHES the complete
     # engine state (event queue, buffers, retained versions, RNG streams,
     # policy/incentive/controller state) is written to checkpoint_dir;
@@ -330,6 +341,12 @@ class AsyncMMFLEngine:
                                            cfg.arrival_options)
         self.arrival.reset(self.K, np.random.default_rng(cfg.seed + 2))
         self.backend = get_backend(cfg.backend)
+        # server aggregation rule (api.aggregator); "fedavg" keeps the
+        # legacy staleness-weighted mean bit-exactly. Per-task server
+        # state (optimizer moments) lives in self._server_state and is
+        # checkpointed alongside the model pytrees.
+        self.aggregator = aggregator_from_config(
+            cfg.aggregator, cfg.aggregator_options, backend=self.backend)
         self._has_acc = all(hasattr(t, "accuracy") for t in self.tasks)
 
     @classmethod
@@ -409,11 +426,14 @@ class AsyncMMFLEngine:
                                    *deltas)
             # FedAST staleness discount on the weights, normalised by the
             # UNDISCOUNTED sum (fed.server.aggregate_stale semantics),
-            # with the weighted sum dispatched through the backend
+            # folded by the pluggable aggregator ("fedavg" dispatches the
+            # weighted sum through the backend — the bit-exact legacy
+            # trace; stateful server optimizers fuse discount + reduce +
+            # moment update into one Pallas pass on compiled platforms)
             w = jnp.asarray(np.asarray(weights, np.float32))
-            disc = staleness_weights(w, np.asarray(stale, np.float32),
-                                     cfg.beta)
-            agg = self.backend.aggregate(stacked, disc, normalizer=w.sum())
+            agg, self._server_state[s] = self.aggregator.aggregate_stale(
+                stacked, w, np.asarray(stale, np.float32), cfg.beta,
+                self._server_state[s], normalizer=w.sum())
             self._params[s] = jax.tree.map(
                 lambda p, d: p + cfg.server_lr * d, self._params[s], agg)
             self._version[s] = cur + 1
@@ -468,6 +488,8 @@ class AsyncMMFLEngine:
         self._buffer_sizes = np.asarray(self.controller.sizes(),
                                         np.int64).copy()
         self._params = [t.init(cfg.seed) for t in self.tasks]
+        self._server_state = [self.aggregator.init(p)
+                              for p in self._params]
         self._metric = np.array([t.evaluate(p) for t, p in
                                  zip(self.tasks, self._params)])
         for t, f in zip(self.tasks, self._metric):
@@ -509,11 +531,8 @@ class AsyncMMFLEngine:
         separately through ``checkpoint.save_pytree`` — see
         ``_save_checkpoint``. ``load_state(state_dict(), params)`` then
         continues event-for-event identically to an uninterrupted run.
-
-        The embedded history/assignment log grows with run length (the
-        same whole-run-RunResult-on-resume design as the sync engine's
-        checkpoints); for very long runs raise ``checkpoint_every``
-        accordingly — an append-only history sidecar is a ROADMAP item."""
+        Layout, atomicity/retention, and the history-growth tradeoff
+        are documented in docs/CHECKPOINTS.md."""
         state = {
             "processed": int(self._processed),
             "n_flushes": int(self._n_flushes),
@@ -545,6 +564,10 @@ class AsyncMMFLEngine:
             },
             "buffer_sizes": [int(v) for v in self._buffer_sizes],
             "controller": self.controller.state_dict(),
+            # aggregator CONFIG record (name + options); the per-task
+            # server-state pytrees travel with the model params — see
+            # _save_checkpoint and docs/CHECKPOINTS.md
+            "aggregator": self.aggregator.state_dict(),
             "coordinator": self.coord.state_dict(),
             # the incentive may re-recruit mid-run; the coordinator state
             # does not embed the matrix, so it is captured here
@@ -574,11 +597,23 @@ class AsyncMMFLEngine:
         self._buffers = [[_Job(int(c), int(s), int(v), dt)
                           for c, s, v, dt in buf]
                          for buf in state["buffers"]]
+        if "aggregator" in state:
+            # raises if the checkpoint was written under a different
+            # aggregator/options (the saved moments would be garbage)
+            self.aggregator.load_state(state["aggregator"])
         self._params, self._retained = [], []
+        self._server_state = []
         for s, task in enumerate(self.tasks):
             tree = task_params[task.name]
             self._params.append(
                 jax.tree.map(jnp.asarray, tree["params"]))
+            srv = tree.get("server_state")
+            # pre-aggregator checkpoints carry no server state: re-init
+            # (zeros) — exact for fedavg (stateless), best-effort for a
+            # stateful rule resumed from an old layout
+            self._server_state.append(
+                jax.tree.map(jnp.asarray, srv) if srv is not None
+                else self.aggregator.init(self._params[s]))
             self._retained.append({
                 int(v): [jax.tree.map(jnp.asarray, tree["retained"][v]),
                          int(cnt)]
@@ -620,6 +655,11 @@ class AsyncMMFLEngine:
                 "retained": {str(v): slot[0]
                              for v, slot in self._retained[s].items()},
             }
+            # server-optimizer moments ride with the model pytrees (the
+            # numpy substrate); omitted entirely for stateless rules so
+            # fedavg checkpoints keep the pre-aggregator layout
+            if self._server_state[s] is not None:
+                trees[task.name]["server_state"] = self._server_state[s]
         ckpt.save(self._n_flushes, trees,
                   coordinator_state={"async": self.state_dict()})
 

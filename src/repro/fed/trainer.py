@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.aggregator import aggregator_from_config
 from repro.api.backend import ClientBatch, CohortTask, get_backend
 from repro.api.policy import (AllocationPolicy, LegacyStrategyPolicy,
                               RoundContext, RoundObservation,
@@ -142,6 +143,10 @@ class TrainConfig:
     # stateful allocation policy (api.policy); None wraps `strategy`
     # bit-exactly via LegacyStrategyPolicy
     policy: Optional[AllocationPolicy] = None
+    # server aggregation rule (api.aggregator AGGREGATORS key); None
+    # selects "fedavg" — the bit-exact legacy weighted mean
+    aggregator: Optional[str] = None
+    aggregator_options: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -180,6 +185,11 @@ class MMFLTrainer:
         # per-round re-recruitment (api.policy.IncentiveMechanism); the
         # legacy one_shot mechanism never updates after round 0
         self.incentive = incentive
+        # server aggregation rule (api.aggregator); "fedavg" reproduces
+        # the pre-aggregator weighted mean bit-exactly. Server state is
+        # initialised inside run() so repeated run() calls start fresh.
+        self.aggregator = aggregator_from_config(
+            cfg.aggregator, cfg.aggregator_options, backend=self.backend)
         # construction-time snapshots: run() restores them so repeated
         # run() calls are identical (the pre-policy contract) even though
         # policy/incentive/eligibility state mutates during a run
@@ -237,6 +247,7 @@ class MMFLTrainer:
             self.incentive.load_state(self._incentive_state0)
         rng = np.random.default_rng(cfg.seed)
         params = self._init_models(jax.random.PRNGKey(cfg.seed))
+        server_state = [self.aggregator.init(p) for p in params]
         accs = np.zeros(self.S)
         for s, t in enumerate(self.tasks):
             accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
@@ -270,8 +281,11 @@ class MMFLTrainer:
                 if need_norms:
                     norms[s] = float(
                         stacked_delta_norms(res.updates, params[s]).mean())
-                params[s] = self.backend.aggregate(
-                    res.updates, jnp.asarray(t.p_k[sel_ids]))
+                # the aggregator folds the cohort (fedavg: the direct
+                # backend weighted mean, bit-exact with the legacy trace)
+                params[s], server_state[s] = self.aggregator.aggregate_params(
+                    params[s], res.updates, jnp.asarray(t.p_k[sel_ids]),
+                    server_state[s])
                 accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
             self.policy.observe(RoundObservation(
                 round=r, task_names=self._names,

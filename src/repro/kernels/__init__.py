@@ -5,6 +5,7 @@
 from repro.kernels.ops import (  # noqa: F401
     fedavg_aggregate,
     flash_attention,
+    fused_aggregate,
     gated_rmsnorm,
     rmsnorm,
     ssd_scan,

@@ -54,6 +54,37 @@ def ref_fedavg(stacked, weights):
                          axes=(0, 0)).astype(stacked.dtype)
 
 
+def ref_fused_aggregate(stacked, weights, staleness, m, v, *, mode, beta,
+                        normalizer, lr=1.0, beta1=0.9, beta2=0.99,
+                        eps=1e-3):
+    """Oracle for ``fedavg.fused_aggregate_pallas``: FedAST staleness
+    discount (normalised by the UNDISCOUNTED weight sum the caller
+    supplies as ``normalizer``) + weighted reduce + FedOpt server-
+    optimizer moment update, all f32. Returns (update, new_m, new_v)."""
+    f32 = jnp.float32
+    w = jnp.asarray(weights, f32)
+    st = jnp.asarray(staleness, f32)
+    disc = (w * (1.0 + st) ** (-beta)
+            / jnp.maximum(jnp.asarray(normalizer, f32), 1e-12))
+    d = jnp.tensordot(disc, jnp.asarray(stacked, f32), axes=(0, 0))
+    m = jnp.asarray(m, f32)
+    v = jnp.asarray(v, f32)
+    if mode == "fedavg":
+        return lr * d, m, v
+    if mode == "fedavgm":
+        m = beta1 * m + d
+        return lr * m, m, v
+    m = beta1 * m + (1.0 - beta1) * d
+    d2 = d * d
+    if mode == "fedadam":
+        v = beta2 * v + (1.0 - beta2) * d2
+    elif mode == "fedyogi":
+        v = v - (1.0 - beta2) * d2 * jnp.sign(v - d2)
+    else:
+        raise ValueError(f"ref_fused_aggregate: unknown mode {mode!r}")
+    return lr * m / (jnp.sqrt(v) + eps), m, v
+
+
 def ref_rmsnorm(x, w, eps=1e-6):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import functools
+import json
 import zlib
 
 import jax
@@ -319,6 +320,9 @@ def build_scenario(args) -> ScenarioSpec:
             buffer_size=args.buffer,
             beta=args.beta,
             buffer_controller=args.buffer_controller,
+            aggregator=args.aggregator,
+            aggregator_options=json.loads(args.aggregator_options)
+            if args.aggregator_options else {},
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
             resume=args.resume))
@@ -373,6 +377,14 @@ def main():
                          "device count on vmap/sharded)")
     ap.add_argument("--beta", type=float, default=0.5,
                     help="async: staleness discount exponent")
+    ap.add_argument("--aggregator", default=None,
+                    help="server aggregation rule (fedavg | fedavgm | "
+                         "fedadam | fedyogi | fedmedian | trimmed_mean | "
+                         "registered AGGREGATORS key); default: the "
+                         "bit-exact legacy weighted mean")
+    ap.add_argument("--aggregator-options", default=None,
+                    help="JSON dict of aggregator constructor options, "
+                         "e.g. '{\"lr\": 0.1}' for --aggregator fedadam")
     ap.add_argument("--buffer-controller", default=None,
                     help="async: adaptive per-task buffer sizing "
                          "(static | staleness_target | arrival_rate | "
@@ -396,13 +408,15 @@ def main():
                                   spec.runtime.backend)
         print(f"ASYNC MMFL: {names} buffer={buf} "
               f"controller={spec.runtime.buffer_controller or 'static'} "
+              f"aggregator={spec.runtime.aggregator or 'fedavg'} "
               f"beta={spec.runtime.beta} "
               f"profile={spec.clients.speed_profile} "
               f"arrival={spec.clients.arrival_process} "
               f"on {jax.device_count()} device(s)")
     else:
         print(f"MMFL concurrent training: {names} "
-              f"[backend={spec.runtime.backend}] on "
+              f"[backend={spec.runtime.backend} "
+              f"aggregator={spec.runtime.aggregator or 'fedavg'}] on "
               f"{jax.device_count()} device(s)")
 
     result = run_scenario(spec, verbose=True)

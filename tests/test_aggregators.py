@@ -1,0 +1,381 @@
+"""Aggregator axis acceptance suite (PR 6).
+
+The bars, in order of strictness:
+
+  * the ``fedavg`` aggregator (and the ``aggregator=None`` default) is
+    BIT-EXACT with the pre-aggregator hard-wired weighted mean, on both
+    runtimes — the exp9 / BENCH_async.json gate in miniature;
+  * the fused one-pass kernel path (``kernels.fedavg``) matches the
+    per-leaf unfused reference within 1e-6 for every fused mode, both at
+    the kernel level (interpret-mode Pallas vs the numpy oracle) and at
+    the aggregator level (updates AND new server moments);
+  * server-optimizer state survives the PR-5 checkpoint/resume machinery:
+    an async fedadam run resumed mid-stream equals the uninterrupted one;
+  * the robust rules (fedmedian / trimmed_mean) shrug off an injected
+    byzantine cohort delta that drags plain fedavg far off course;
+  * ``ops.fedavg_aggregate`` promotes mixed f32/bf16 inputs instead of
+    demoting the weights (the PR-6 dtype bugfix), and rejects ints;
+  * config/state error paths fail loudly (options without a name,
+    unknown keys, bad options, resume under a different aggregator).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AGGREGATORS, ClientPopulationSpec, RuntimeSpec,
+                       ScenarioSpec, TaskSpec, aggregator_from_config,
+                       get_aggregator, run_scenario)
+from repro.kernels import fedavg_aggregate, fused_aggregate
+from repro.kernels.fedavg import FUSED_MODES, fused_aggregate_pallas
+from repro.kernels.ref import ref_fused_aggregate
+
+TOL = dict(rtol=1e-6, atol=1e-6)
+
+
+def scenario(mode, aggregator=None, options=None, ckpt_dir=None,
+             every=4, resume=False, total_arrivals=36):
+    return ScenarioSpec(
+        name="agg",
+        seed=0,
+        tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]}),
+               TaskSpec("synth-fmnist", options={"n_range": [40, 60]})],
+        clients=ClientPopulationSpec(n_clients=10,
+                                     speed_profile="bimodal",
+                                     speed_spread=4.0),
+        runtime=RuntimeSpec(mode=mode, tau=2, rounds=6,
+                            total_arrivals=total_arrivals, buffer_size=3,
+                            aggregator=aggregator,
+                            aggregator_options=dict(options or {}),
+                            checkpoint_dir=ckpt_dir,
+                            checkpoint_every=every,
+                            resume=resume))
+
+
+def rand_cohort(rng, K=6, shapes=((5, 4), (4,), (3, 2)), scale=0.1,
+                dtype=jnp.float32):
+    """A stacked-deltas pytree with a leading cohort axis of K clients."""
+    return {f"p{i}": jnp.asarray(
+        scale * rng.standard_normal((K,) + s), dtype)
+        for i, s in enumerate(shapes)}
+
+
+def template_of(stacked):
+    return jax.tree.map(lambda leaf: leaf[0], stacked)
+
+
+# ------------------------------------------- fedavg wrapper bit-exactness
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_fedavg_wrapper_is_bit_exact(mode):
+    """aggregator=None (legacy dispatch) and aggregator='fedavg' (the
+    wrapper object) produce IDENTICAL float traces on both runtimes —
+    the registry indirection costs zero ULPs."""
+    a = run_scenario(scenario(mode))
+    b = run_scenario(scenario(mode, aggregator="fedavg"))
+    np.testing.assert_array_equal(np.asarray(a.loss), np.asarray(b.loss))
+    np.testing.assert_array_equal(np.asarray(a.acc), np.asarray(b.acc))
+    if mode == "async":
+        np.testing.assert_array_equal(np.asarray(a.time),
+                                      np.asarray(b.time))
+        np.testing.assert_array_equal(np.asarray(a.staleness_mean),
+                                      np.asarray(b.staleness_mean))
+        assert a.assignments == b.assignments
+
+
+# ------------------------------------------------- fused vs unfused parity
+
+@pytest.mark.parametrize("mode", FUSED_MODES)
+def test_fused_kernel_matches_numpy_oracle(mode):
+    """Interpret-mode Pallas == the kernels/ref.py oracle for every fused
+    mode, including non-multiple-of-block N (padding path)."""
+    rng = np.random.default_rng(0)
+    K, N = 5, 1000       # deliberately not a block multiple
+    stacked = rng.standard_normal((K, N)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, K).astype(np.float32)
+    st = rng.integers(0, 4, K).astype(np.float32)
+    m = rng.standard_normal(N).astype(np.float32) * 0.01
+    v = rng.uniform(1e-6, 1e-2, N).astype(np.float32)
+    kw = dict(mode=mode, beta=0.5, normalizer=float(w.sum()),
+              lr=0.7, beta1=0.9, beta2=0.99, eps=1e-3)
+    got = fused_aggregate_pallas(stacked, w, st, m, v, blk=256,
+                                 interpret=True, **kw)
+    want = ref_fused_aggregate(stacked, w, st, m, v, **kw)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), **TOL)
+
+
+@pytest.mark.parametrize("name,options", [
+    ("fedavgm", {"momentum": 0.9, "lr": 0.5}),
+    ("fedadam", {"lr": 0.3}),
+    ("fedyogi", {"lr": 0.3, "beta2": 0.95}),
+])
+def test_fused_aggregator_matches_unfused(name, options):
+    """Aggregator-level law: fused=True (ravel -> one-pass kernel ->
+    unravel) and fused=False (per-leaf jnp reference) agree within 1e-6
+    on the update AND every server moment, starting from a non-trivial
+    state (two chained flushes)."""
+    rng = np.random.default_rng(1)
+    fused = get_aggregator(name, {**options, "fused": True})
+    plain = get_aggregator(name, {**options, "fused": False})
+    stacked = rand_cohort(rng)
+    params = template_of(stacked)
+    sf, sp = fused.init(params), plain.init(params)
+    for step in range(2):
+        deltas = rand_cohort(rng, scale=0.1 / (step + 1))
+        w = jnp.asarray(rng.uniform(0.5, 2.0, 6), jnp.float32)
+        st = jnp.asarray(rng.integers(0, 3, 6), jnp.float32)
+        uf, sf = fused.aggregate_stale(deltas, w, st, 0.5, sf,
+                                       normalizer=w.sum())
+        up, sp = plain.aggregate_stale(deltas, w, st, 0.5, sp,
+                                       normalizer=w.sum())
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), **TOL),
+            uf, up)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), **TOL), sf, sp)
+
+
+def test_fused_auto_selects_and_runs():
+    """fused=None auto-selects per platform; whatever it picks agrees
+    with the explicit unfused reference (CPU CI exercises the single-jit
+    jnp composition in ops.fused_aggregate)."""
+    rng = np.random.default_rng(2)
+    auto = get_aggregator("fedadam")
+    plain = get_aggregator("fedadam", {"fused": False})
+    stacked = rand_cohort(rng)
+    params = template_of(stacked)
+    w = jnp.ones(6, jnp.float32)
+    st = jnp.asarray(rng.integers(0, 3, 6), jnp.float32)
+    ua, sa = auto.aggregate_stale(stacked, w, st, 0.5, auto.init(params),
+                                  normalizer=w.sum())
+    up, sp = plain.aggregate_stale(stacked, w, st, 0.5, plain.init(params),
+                                   normalizer=w.sum())
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), **TOL),
+        (ua, sa), (up, sp))
+
+
+def test_ops_fused_aggregate_matches_oracle():
+    """The public ops.fused_aggregate wrapper (the async engines' entry
+    point) equals the raw oracle on this platform."""
+    rng = np.random.default_rng(3)
+    K, N = 4, 300
+    stacked = rng.standard_normal((K, N)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, K).astype(np.float32)
+    st = rng.integers(0, 4, K).astype(np.float32)
+    m = np.zeros(N, np.float32)
+    v = np.full(N, 1e-6, np.float32)
+    kw = dict(mode="fedyogi", beta=0.5, normalizer=float(w.sum()), lr=0.7)
+    got = fused_aggregate(stacked, w, st, m, v, **kw)
+    want = ref_fused_aggregate(stacked, w, st, m, v, **kw)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), **TOL)
+
+
+# ------------------------------------------------ end-to-end + checkpoints
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+@pytest.mark.parametrize("name,options", [
+    ("fedavgm", {}), ("fedadam", {"lr": 0.5}), ("fedmedian", {}),
+    ("trimmed_mean", {"trim": 0.2}),
+])
+def test_aggregators_run_end_to_end(mode, name, options):
+    """Every built-in drives both runtimes through run_scenario to
+    finite losses (the fairness comparison itself is exp13's job)."""
+    r = run_scenario(scenario(mode, aggregator=name, options=options,
+                              total_arrivals=24))
+    losses = np.asarray(r.loss, np.float64)
+    assert losses.size and np.isfinite(losses).all()
+
+
+def test_async_resume_with_fedadam_matches_uninterrupted(tmp_path):
+    """Server-optimizer moments thread through the PR-5 checkpoint: an
+    async fedadam run resumed from a mid-run flush checkpoint replays to
+    an IDENTICAL trace (loss/time/staleness/assignments) — the moments
+    were saved and restored exactly, or the tails would diverge."""
+    d = str(tmp_path / "ck")
+    opts = {"lr": 0.5}
+    full = run_scenario(scenario("async", aggregator="fedadam",
+                                 options=opts))
+    run_scenario(scenario("async", aggregator="fedadam", options=opts,
+                          ckpt_dir=d))
+    latest = int(open(f"{d}/LATEST").read())
+    assert 0 < latest < len(full.time)      # genuinely mid-run
+    resumed = run_scenario(scenario("async", aggregator="fedadam",
+                                    options=opts, ckpt_dir=d, resume=True))
+    np.testing.assert_array_equal(np.asarray(full.loss),
+                                  np.asarray(resumed.loss))
+    np.testing.assert_array_equal(np.asarray(full.acc),
+                                  np.asarray(resumed.acc))
+    np.testing.assert_array_equal(np.asarray(full.time),
+                                  np.asarray(resumed.time))
+    np.testing.assert_array_equal(np.asarray(full.staleness_mean),
+                                  np.asarray(resumed.staleness_mean))
+    assert full.assignments == resumed.assignments
+
+
+def test_resume_under_different_aggregator_raises(tmp_path):
+    """Resuming a fedadam checkpoint under fedavgm (or fedadam with
+    different options) would silently reinterpret the saved moments —
+    both mismatches raise up front."""
+    d = str(tmp_path / "ck")
+    run_scenario(scenario("async", aggregator="fedadam",
+                          options={"lr": 0.5}, ckpt_dir=d))
+    with pytest.raises(ValueError, match="fedadam"):
+        run_scenario(scenario("async", aggregator="fedavgm",
+                              ckpt_dir=d, resume=True))
+    with pytest.raises(ValueError, match="options"):
+        run_scenario(scenario("async", aggregator="fedadam",
+                              options={"lr": 0.25}, ckpt_dir=d,
+                              resume=True))
+
+
+# ------------------------------------------------------ byzantine cohorts
+
+def test_robust_rules_shrug_off_byzantine_delta():
+    """Inject one corrupted client delta (1e3 x the honest scale) into a
+    cohort: fedavg is dragged off by orders of magnitude, while the
+    median and the trimmed mean stay within the honest spread."""
+    rng = np.random.default_rng(4)
+    K = 9
+    honest = 0.01 * rng.standard_normal((K, 64)).astype(np.float32)
+    poisoned = honest.copy()
+    poisoned[3] = 1e3                      # byzantine client
+    w = np.ones(K, np.float32)
+    honest_mean = honest.mean(axis=0)
+
+    def update(name, options=None):
+        agg = get_aggregator(name, options)
+        upd, _ = agg.aggregate({"p": jnp.asarray(poisoned)}, w, None)
+        return np.asarray(upd["p"])
+
+    err = {name: np.abs(update(name, opts) - honest_mean).max()
+           for name, opts in (("fedavg", None), ("fedmedian", None),
+                              ("trimmed_mean", {"trim": 0.2}))}
+    assert err["fedavg"] > 50.0            # ~1e3/9 pull from one client
+    assert err["fedmedian"] < 0.05         # within the honest spread
+    assert err["trimmed_mean"] < 0.05
+
+
+def test_trimmed_mean_trim_zero_is_unweighted_mean():
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((6, 17)).astype(np.float32)
+    upd, _ = get_aggregator("trimmed_mean", {"trim": 0.0}).aggregate(
+        {"p": jnp.asarray(x)}, np.ones(6, np.float32), None)
+    np.testing.assert_allclose(np.asarray(upd["p"]), x.mean(axis=0),
+                               rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------------------------- dtype bugfix (ops)
+
+def test_fedavg_aggregate_promotes_bf16_cohort():
+    """Regression (PR-6 bugfix): f32 aggregation weights must NOT be
+    demoted to a bf16 cohort dtype before the reduce. The kernel now
+    promotes to the common dtype and casts the result back — so the
+    output equals the full-precision reduce rounded ONCE at the end."""
+    rng = np.random.default_rng(6)
+    K, N = 4, 256
+    full = rng.standard_normal((K, N)).astype(np.float32)
+    stacked = jnp.asarray(full, jnp.bfloat16)
+    # pre-normalized weights (the backends' calling convention) whose
+    # values need more than bf16's 8 mantissa bits: demoting them first
+    # visibly skews the fold
+    raw = np.asarray([1.001, 2.003, 3.007, 5.011], np.float32)
+    w = jnp.asarray(raw / raw.sum(), jnp.float32)
+    got = fedavg_aggregate(stacked, w)
+    assert got.dtype == jnp.bfloat16
+    want = (np.asarray(w) @ np.asarray(stacked, np.float32)
+            ).astype(jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_fedavg_aggregate_rejects_integer_inputs():
+    with pytest.raises(TypeError, match="floating"):
+        fedavg_aggregate(jnp.ones((3, 8), jnp.int32),
+                         jnp.ones(3, jnp.float32))
+    with pytest.raises(TypeError, match="floating"):
+        fedavg_aggregate(jnp.ones((3, 8), jnp.float32),
+                         jnp.ones(3, jnp.int32))
+
+
+# ------------------------------------------------------ config error paths
+
+def test_options_without_name_rejected():
+    with pytest.raises(ValueError, match="without an aggregator"):
+        aggregator_from_config(None, {"lr": 0.5})
+    with pytest.raises(ValueError, match="aggregator"):
+        run_scenario(scenario("sync", options={"lr": 0.5}))
+
+
+def test_unknown_and_bad_options_fail_loudly():
+    with pytest.raises(KeyError, match="unknown aggregator"):
+        run_scenario(scenario("sync", aggregator="fedprox"))
+    with pytest.raises(ValueError, match="fedadam"):
+        get_aggregator("fedadam", {"learning_rate": 0.5})   # typo'd option
+    with pytest.raises(ValueError, match="trim"):
+        get_aggregator("trimmed_mean", {"trim": 0.7})
+    with pytest.raises(ValueError, match="momentum"):
+        get_aggregator("fedavgm", {"momentum": 1.5})
+
+
+def test_custom_aggregator_dispatches_through_registry():
+    """A user-registered rule is constructible by key and drives the
+    async engine end-to-end (the plugin recipe in docs/ARCHITECTURE.md)."""
+    from repro.api import Aggregator, register_aggregator
+
+    if "half_step" not in AGGREGATORS:
+        @register_aggregator("half_step")
+        class HalfStep(Aggregator):
+            name = "half_step"
+
+            def aggregate(self, stacked_deltas, weights, server_state,
+                          normalizer=None):
+                agg = self._agg_backend().aggregate(
+                    stacked_deltas, weights, normalizer=normalizer)
+                return jax.tree.map(lambda a: 0.5 * a, agg), server_state
+
+    r = run_scenario(scenario("async", aggregator="half_step",
+                              total_arrivals=24))
+    assert np.isfinite(np.asarray(r.loss, np.float64)).all()
+
+
+# --------------------------------------- hypothesis state round-trip law
+# (guarded per-test, NOT importorskip — that would skip this whole module
+# on containers without hypothesis)
+
+try:
+    from hypothesis import assume, given, settings
+    from hypothesis import strategies as st
+except ImportError:         # pragma: no cover - exercised in bare envs
+    given = None
+
+if given is None:           # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_every_registered_aggregator_state_roundtrips():
+        pass
+else:
+    @given(data=st.data())
+    @settings(max_examples=20, deadline=None)
+    def test_every_registered_aggregator_state_roundtrips(data):
+        """LAW: for every registered aggregator, state_dict ->
+        json.dumps -> json.loads -> load_state onto a same-config clone
+        validates cleanly and reproduces the state_dict; a clone with
+        ANY different option must refuse the checkpoint."""
+        name = data.draw(st.sampled_from(sorted(AGGREGATORS.names())))
+        try:
+            agg = AGGREGATORS.get(name)()
+        except TypeError:   # test-registered entry without default ctor
+            assume(False)
+        state = json.loads(json.dumps(agg.state_dict()))
+        clone = AGGREGATORS.get(name)()
+        clone.load_state(state)
+        assert clone.state_dict() == agg.state_dict()
+        if agg._options:
+            key = data.draw(st.sampled_from(sorted(agg._options)))
+            bad = dict(state, options={**state["options"], key: "x"})
+            with pytest.raises(ValueError):
+                clone.load_state(bad)
