@@ -619,3 +619,82 @@ def exp11_policy_comparison(fast=True, seeds=(0, 1),
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
     return out
+
+
+def exp14_cost_models(fast=True, seeds=(0, 1), target=0.55,
+                      json_path="BENCH_costmodels.json"):
+    """Cost-model headline: allocation policies compared on WALL-CLOCK
+    time-to-accuracy under heterogeneous client cost — the same async
+    spec through run_scenario, sweeping ``runtime.cost_model`` (constant
+    legacy timing vs device_tiers compute/bandwidth skew vs heavy-tailed
+    lognormal stragglers with dropouts) x allocation policy (fedfair /
+    random legacy wrappers, ucb_bandit / thompson bandits). Per cell:
+    the ``time_to_accuracy`` fairness report (max and variance across
+    tasks of time-to-target — None max means a task never got there),
+    final min/var accuracy, and cost-model dropouts. Writes
+    BENCH_costmodels.json for the CI artifact trail."""
+    K = 16
+    arrivals = 120 if fast else 600
+    names = ["synth-mnist", "synth-fmnist"]
+    cost_models = {
+        "constant": (None, {}),
+        "device_tiers": ("device_tiers", {"comm_scale": 0.25}),
+        "lognormal_straggler": ("lognormal_straggler",
+                                {"sigma": 0.6, "straggler_frac": 0.25,
+                                 "straggler_factor": 4.0,
+                                 "dropout_prob": 0.05}),
+    }
+    policies = {
+        "fedfair": None,
+        "random": None,
+        "ucb_bandit": PolicySpec("ucb_bandit"),
+        "thompson": PolicySpec("thompson"),
+    }
+    out = {}
+    for cm_label, (cm, cm_opts) in cost_models.items():
+        for pol_label, pol in policies.items():
+            t2a_max, t2a_var, unreached = [], [], 0
+            mins, variances, drops = [], [], []
+            for seed in seeds:
+                spec = ScenarioSpec(
+                    name=f"{cm_label}-{pol_label}-s{seed}",
+                    seed=seed, data_seed=0,
+                    tasks=_tasks(names, (60, 90)),
+                    clients=ClientPopulationSpec(
+                        n_clients=K, speed_profile="bimodal",
+                        speed_spread=4.0),
+                    allocation=AllocationSpec(
+                        strategy=(pol_label if pol is None else "fedfair")),
+                    policy=pol,
+                    runtime=RuntimeSpec(
+                        mode="async", tau=3, total_arrivals=arrivals,
+                        buffer_size=3, beta=0.5, cost_model=cm,
+                        cost_model_options=dict(cm_opts)))
+                r = run_scenario(spec)
+                rep = r.time_to_accuracy(target)
+                if rep["max_time"] is not None:
+                    t2a_max.append(rep["max_time"])
+                else:
+                    unreached += 1
+                if rep["var_time"] is not None:
+                    t2a_var.append(rep["var_time"])
+                mins.append(r.min_acc[-1])
+                variances.append(r.var_acc[-1])
+                drops.append(r.cost_dropouts)
+            out[f"{cm_label}/{pol_label}"] = {
+                "t2a_max": float(np.mean(t2a_max)) if t2a_max else None,
+                "t2a_var": float(np.mean(t2a_var)) if t2a_var else None,
+                "seeds_unreached": unreached,
+                "min_acc": float(np.mean(mins)),
+                "var_acc": float(np.mean(variances)),
+                "cost_dropouts": float(np.mean(drops)),
+            }
+    out["config"] = {"clients": K, "arrivals": arrivals,
+                     "buffer_size": 3, "target_min_acc": target,
+                     "cost_models": {k: [v[0], v[1]]
+                                     for k, v in cost_models.items()},
+                     "seeds": list(seeds)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out

@@ -63,6 +63,7 @@ def experiment_specs():
         ("exp11_policy_comparison", E.exp11_policy_comparison),
         ("exp12_adaptive_buffers", E.exp12_adaptive_buffers),
         ("exp13_aggregators", E.exp13_aggregators),
+        ("exp14_cost_models", E.exp14_cost_models),
     ]
 
 

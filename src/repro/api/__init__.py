@@ -28,7 +28,13 @@ resume is event-for-event exact. The server FOLD is the fifth axis:
 ``repro.api.aggregator``, ``RuntimeSpec.aggregator``) replace the
 hard-wired weighted mean with stateful server optimizers (fedavgm /
 fedadam / fedyogi) or robust rules (fedmedian / trimmed_mean), with
-their per-task moments threaded through the same checkpoints.
+their per-task moments threaded through the same checkpoints. The sixth
+axis is TIME: ``ClientCostModel`` objects (``@register_cost_model``,
+``repro.api.costmodel``, ``RuntimeSpec.cost_model``) map (client, task)
+to simulated compute + comm latency — arrival processes schedule a
+job's dispatch, cost models determine its completion — giving every
+engine a ``wall_clock_sim`` curve and ``RunResult.time_to_accuracy``
+its heterogeneous-device fairness reading.
 
 See docs/ARCHITECTURE.md for the full composition chain and a plugin
 recipe per axis; docs/REGISTRY.md for every registered key.
@@ -43,6 +49,7 @@ from repro.api.registry import (  # noqa: F401
     AUCTIONS,
     BACKENDS,
     BUFFER_CONTROLLERS,
+    COST_MODELS,
     INCENTIVES,
     POLICIES,
     Registry,
@@ -52,6 +59,7 @@ from repro.api.registry import (  # noqa: F401
     register_auction,
     register_backend,
     register_buffer_controller,
+    register_cost_model,
     register_incentive,
     register_policy,
     register_task_family,
@@ -84,6 +92,14 @@ from repro.api.arrivals import (  # noqa: F401
     PoissonParticipation,
     get_arrival_process,
 )
+from repro.api.costmodel import (  # noqa: F401
+    ClientCostModel,
+    DeviceTiers,
+    LatencySample,
+    LognormalStraggler,
+    TraceReplay,
+    get_cost_model,
+)
 from repro.api.buffer import (  # noqa: F401
     ArrivalRateController,
     BufferController,
@@ -101,6 +117,7 @@ from repro.api.policy import (  # noqa: F401
     PeriodicAuction,
     RoundContext,
     RoundObservation,
+    ThompsonPolicy,
     UCBBanditPolicy,
     build_eligibility,
     incentive_from_spec,

@@ -35,13 +35,14 @@ from repro.api.registry import (
     ARRIVAL_PROCESSES,
     BACKENDS,
     BUFFER_CONTROLLERS,
+    COST_MODELS,
     INCENTIVES,
     POLICIES,
     TASK_FAMILIES,
     register_task_family,
 )
 from repro.api.spec import ScenarioSpec
-from repro.core.fairness import fairness_report
+from repro.core.fairness import fairness_report, time_to_accuracy_report
 from repro.fed.async_engine import AsyncConfig, AsyncMMFLEngine, FedAsyncTask
 from repro.fed.data import _RECIPES, make_synthetic_task, task_seed
 from repro.fed.trainer import MMFLTrainer, TrainConfig
@@ -82,6 +83,11 @@ class RunResult:
     # controller's emission trajectory; constant rows under "static")
     buffer_sizes: Optional[np.ndarray] = None
     dropped: int = 0
+    # cost-model simulated wall clock: (T,) cumulative per-round clock
+    # for sync runs (round time = max over cohort latencies), the flush
+    # event times for async runs. None only for legacy histories.
+    wall_clock_sim: Optional[np.ndarray] = None
+    cost_dropouts: int = 0  # async jobs the cost model dropped entirely
     auction: Optional[Dict[str, Any]] = None
     params: Optional[List] = None  # final per-task model pytrees
 
@@ -117,6 +123,22 @@ class RunResult:
             raise ValueError("this task family does not define accuracy")
         return self.acc.var(axis=1)
 
+    def time_to_accuracy(self, target: float) -> Dict[str, Any]:
+        """Per-task simulated time to first reach ``target`` accuracy,
+        plus the cross-task fairness spread (max / variance) — see
+        ``core.fairness.time_to_accuracy_report``. Reads the cost-model
+        clock (``wall_clock_sim``; async virtual ``time`` as fallback,
+        then the round index for legacy sync histories)."""
+        if self.acc is None:
+            raise ValueError("this task family does not define accuracy")
+        times = self.wall_clock_sim
+        if times is None:
+            times = self.time
+        if times is None:
+            times = np.arange(1, len(self.acc) + 1, dtype=np.float64)
+        return time_to_accuracy_report(times, self.acc, target,
+                                       self.task_names)
+
     @property
     def final_loss(self) -> Dict[str, float]:
         if len(self.loss) == 0:
@@ -140,7 +162,9 @@ class RunResult:
             "alloc_counts": arr(self.alloc_counts),
             "virtual_time": float(self.virtual_time),
             "wall_time": float(self.wall_time),
+            "wall_clock_sim": arr(self.wall_clock_sim),
             "dropped": int(self.dropped),
+            "cost_dropouts": int(self.cost_dropouts),
             "versions": arr(self.versions),
             "buffer_sizes": arr(self.buffer_sizes),
             "final_buffer_sizes": (
@@ -189,6 +213,8 @@ def _train_config(spec: ScenarioSpec) -> TrainConfig:
         policy=policy_from_spec(spec.policy, al.strategy),
         aggregator=rt.aggregator,
         aggregator_options=dict(rt.aggregator_options),
+        cost_model=rt.cost_model,
+        cost_model_options=dict(rt.cost_model_options),
     )
 
 
@@ -211,6 +237,8 @@ def _async_config(spec: ScenarioSpec) -> AsyncConfig:
         buffer_controller_options=dict(rt.buffer_controller_options),
         aggregator=rt.aggregator,
         aggregator_options=dict(rt.aggregator_options),
+        cost_model=rt.cost_model,
+        cost_model_options=dict(rt.cost_model_options),
         checkpoint_dir=rt.checkpoint_dir,
         checkpoint_every=rt.checkpoint_every,
         resume=rt.resume,
@@ -251,6 +279,7 @@ class SyncFedEngine:
             arrivals=h.alloc_counts.sum(axis=0),
             alloc_counts=h.alloc_counts,
             alloc=h.alloc,
+            wall_clock_sim=h.wall_clock_sim,
             spec=self.spec,
             params=self.trainer.params,
         )
@@ -279,6 +308,8 @@ class AsyncEngineRunner:
             versions=h.versions,
             buffer_sizes=h.buffer_sizes,
             dropped=h.dropped,
+            wall_clock_sim=h.wall_clock_sim,
+            cost_dropouts=h.cost_dropouts,
             assignments=h.assignments,
             spec=self.spec,
             params=self.engine._params,
@@ -422,6 +453,14 @@ class ArchSyncEngine:
             for a in self.names
         }
         self._eval_acc = {a: make_arch_eval(tasks[a], data[a])[1] for a in self.names}
+        # client cost model (api.costmodel): each round's simulated
+        # duration is the max over the cohort's sampled latencies (the
+        # lockstep barrier); "constant" gives every job unit cost
+        from repro.api.costmodel import get_cost_model
+
+        self.cost_model = get_cost_model(
+            spec.runtime.cost_model or "constant",
+            spec.runtime.cost_model_options)
         self.coord = MMFLCoordinator(
             task_names=self.names,
             n_clients=spec.clients.n_clients,
@@ -487,21 +526,28 @@ class ArchSyncEngine:
         spec, rt = self.spec, self.spec.runtime
         rng = np.random.default_rng(spec.seed)
         loss_hist, count_hist, alloc_hist, acc_hist = [], [], [], []
+        clock_hist: List[float] = []
+        # the cost model samples from its OWN stream (seed + 3), sized
+        # by the per-task parameter counts (FLOP scaling input)
+        import jax as _jax
+
+        self.cost_model.reset(
+            spec.clients.n_clients, len(self.names),
+            np.random.default_rng(spec.seed + 3),
+            task_sizes=[float(sum(np.size(leaf) for leaf in
+                                  _jax.tree.leaves(self.tasks[a]["params"])))
+                        for a in self.names])
 
         ckpt, start_round = None, 0
         if rt.checkpoint_dir:
             from repro.checkpoint import CheckpointManager
 
             ckpt = CheckpointManager(rt.checkpoint_dir)
-            if rt.resume and ckpt.latest_step() is not None:
-                step, saved, coord_state = ckpt.restore()
-                if "async" in coord_state:
-                    raise ValueError(
-                        f"cannot resume: checkpoint step {step} in "
-                        f"{rt.checkpoint_dir!r} was written by the async "
-                        "engine; point the sync run at its own "
-                        "checkpoint directory"
-                    )
+            # shared resume preamble (CheckpointManager.begin): resume
+            # gate, foreign-engine guard, stale-step clear
+            hit = ckpt.begin("sync", rt.resume)
+            if hit is not None:
+                step, saved, coord_state = hit
                 import jax
                 import jax.numpy as jnp
 
@@ -537,19 +583,22 @@ class ArchSyncEngine:
                     acc_hist = [list(x) for x in hist.get("acc", [])]
                     if len(acc_hist) != len(loss_hist):
                         acc_hist = []
+                    # pre-cost-model checkpoints carry no clock; only
+                    # restore when it covers the restored rounds
+                    clock_hist = [float(x)
+                                  for x in hist.get("wall_clock", [])]
+                    if len(clock_hist) != len(loss_hist):
+                        clock_hist = []
+                    if "cost_model" in coord_state:
+                        self.cost_model.load_state(
+                            coord_state["cost_model"])
                 else:                      # legacy pre-PR2 payload
                     self.coord.load_state(coord_state)
                 start_round = step
                 if verbose:
                     print(f"resumed from round {step}")
-            elif ckpt.steps():
-                # fresh-start run into a previously-used directory: drop
-                # stale steps so retention can't collect the new run's
-                # lower-numbered checkpoints. Safe under resume=True:
-                # reaching here means latest_step() found no COMPLETE
-                # step, so everything present is partial junk.
-                ckpt.clear()
         want_norms = self.coord.wants_update_norms
+        clock = clock_hist[-1] if clock_hist else 0.0
         for r in range(start_round, rt.rounds):
             if self.incentive is not None:
                 upd = self.incentive.recruit(
@@ -569,12 +618,20 @@ class ArchSyncEngine:
             line = []
             row = np.full(spec.clients.n_clients, -1, np.int64)
             norms = np.full(len(self.names), np.nan) if want_norms else None
+            # simulated round duration: the lockstep barrier waits for
+            # the slowest sampled (client, task) latency this round
+            round_time = 0.0
             for s, a in enumerate(self.names):
                 ids = alloc[a]
                 if len(ids) == 0:
                     line.append(f"{a}: -")
                     continue
                 row[ids] = s
+                for i in ids:
+                    round_time = max(
+                        round_time,
+                        self.cost_model.sample_latency(
+                            int(i), s, 1.0, time=clock).total)
                 loss, norm = self._run_task_round(a, ids, rng, want_norms)
                 if want_norms and norm is not None:
                     norms[s] = norm
@@ -585,6 +642,8 @@ class ArchSyncEngine:
             count_hist.append([len(alloc[a]) for a in self.names])
             alloc_hist.append(row)
             acc_hist.append([self._acc_of(a) for a in self.names])
+            clock += round_time
+            clock_hist.append(clock)
             if verbose:
                 print(f"round {r + 1:3d} [{time.time() - t0:5.1f}s] " + " | ".join(line))
             if ckpt and (r + 1) % rt.checkpoint_every == 0:
@@ -603,6 +662,7 @@ class ArchSyncEngine:
                     "coordinator": self.coord.state_dict(),
                     "data_rng": rng.bit_generator.state,
                     "aggregator": self.aggregator.state_dict(),
+                    "cost_model": self.cost_model.state_dict(),
                 }
                 if self.incentive is not None:
                     coord_payload["incentive"] = self.incentive.state_dict()
@@ -616,6 +676,7 @@ class ArchSyncEngine:
                             "counts": [list(x) for x in count_hist],
                             "alloc": [np.asarray(x).tolist() for x in alloc_hist],
                             "acc": [list(x) for x in acc_hist],
+                            "wall_clock": [float(x) for x in clock_hist],
                         },
                     },
                 )
@@ -626,6 +687,11 @@ class ArchSyncEngine:
         acc = None
         if len(acc_hist) == len(loss_hist):
             acc = np.array(acc_hist).reshape(-1, len(self.names))
+        # a resume from a pre-cost-model checkpoint leaves the clock
+        # covering only the tail: report it only when it spans every round
+        wall_clock = None
+        if len(clock_hist) == len(loss_hist):
+            wall_clock = np.asarray(clock_hist, np.float64)
         return RunResult(
             scenario=spec.name,
             mode="sync",
@@ -635,12 +701,34 @@ class ArchSyncEngine:
             arrivals=counts.sum(axis=0),
             alloc_counts=counts,
             alloc=np.array(alloc_hist),
+            wall_clock_sim=wall_clock,
             spec=spec,
             params=[self.tasks[a]["params"] for a in self.names],
         )
 
 
 # ------------------------------------------------------------ entry point
+
+
+def _require_named_options(spec: ScenarioSpec) -> None:
+    """One options-without-name check for every optional runtime axis
+    (previously duplicated ad hoc per axis): options only make sense
+    once an entry is named — silently ignoring them would hide typos."""
+    rt = spec.runtime
+    axes = [
+        ("aggregator", rt.aggregator, rt.aggregator_options, "fedadam"),
+        ("buffer_controller", rt.buffer_controller,
+         rt.buffer_controller_options, "staleness_target"),
+        ("cost_model", rt.cost_model, rt.cost_model_options,
+         "device_tiers"),
+    ]
+    for axis, name, options, example in axes:
+        if name is None and options:
+            article = "an" if axis[0] in "aeiou" else "a"
+            raise ValueError(
+                f"runtime.{axis}_options were given without {article} "
+                f"{axis}; name one (e.g. {example!r}) or drop the "
+                "options")
 
 
 def run_scenario(spec: ScenarioSpec, verbose: bool = False) -> RunResult:
@@ -671,12 +759,9 @@ def run_scenario(spec: ScenarioSpec, verbose: bool = False) -> RunResult:
             )
     if spec.runtime.aggregator is not None:
         AGGREGATORS.get(spec.runtime.aggregator)
-    elif spec.runtime.aggregator_options:
-        raise ValueError(
-            "runtime.aggregator_options were given without a "
-            "runtime.aggregator; name one (e.g. 'fedadam') or drop the "
-            "options"
-        )
+    if spec.runtime.cost_model is not None:
+        COST_MODELS.get(spec.runtime.cost_model)
+    _require_named_options(spec)
     auction_summary = None
     eligibility = None
     incentive = None

@@ -259,6 +259,88 @@ class UCBBanditPolicy(AllocationPolicy):
             self.counts = self.means = self.last_loss = None
 
 
+@register_policy("thompson")
+class ThompsonPolicy(AllocationPolicy):
+    """Thompson sampling on per-task loss-delta rewards (the Bayesian
+    sibling of ``ucb_bandit``): each task's reward posterior is modelled
+    as Normal(mean, scale^2 / (count + 1)); every allocation draws one
+    sample per task and puts ``1 - epsilon`` mass on the argmax,
+    spreading ``epsilon`` uniformly so no task starves. Draws come from
+    the policy's OWN seeded generator — checkpointed via ``rng_state``,
+    so a resumed run samples the same posterior sequence."""
+
+    name = "thompson"
+
+    def __init__(self, scale: float = 0.05, epsilon: float = 0.1,
+                 seed: int = 0):
+        if scale <= 0:
+            raise ValueError(f"thompson: scale must be > 0, got {scale}")
+        if not 0.0 <= epsilon <= 1.0:
+            raise ValueError(
+                f"thompson: epsilon must be in [0, 1], got {epsilon}")
+        self.scale = float(scale)
+        self.epsilon = float(epsilon)
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+        self.counts: Optional[np.ndarray] = None
+        self.means: Optional[np.ndarray] = None
+        self.last_loss: Optional[np.ndarray] = None
+
+    def _ensure(self, S: int) -> None:
+        if self.counts is None:
+            self.counts = np.zeros(S, np.int64)
+            self.means = np.zeros(S)
+            self.last_loss = np.full(S, np.nan)
+        elif len(self.counts) != S:
+            raise ValueError(
+                f"thompson: task count changed ({len(self.counts)} -> {S})")
+
+    def observe(self, obs: RoundObservation) -> None:
+        self._ensure(len(obs.task_names))
+        losses = np.asarray(obs.losses, np.float64)
+        for s in np.where(np.asarray(obs.alloc_counts) > 0)[0]:
+            if np.isfinite(self.last_loss[s]) and np.isfinite(losses[s]):
+                reward = float(self.last_loss[s] - losses[s])
+                self.counts[s] += 1
+                self.means[s] += (reward - self.means[s]) / self.counts[s]
+        finite = np.isfinite(losses)
+        self.last_loss[finite] = losses[finite]
+
+    def allocate(self, ctx: RoundContext) -> np.ndarray:
+        S = len(ctx.task_names)
+        self._ensure(S)
+        draws = self.rng.normal(self.means,
+                                self.scale / np.sqrt(self.counts + 1.0))
+        probs = np.full(S, self.epsilon / S)
+        probs[int(np.argmax(draws))] += 1.0 - self.epsilon
+        return probs
+
+    def state_dict(self) -> Dict[str, Any]:
+        state: Dict[str, Any] = {"rng_state": self.rng.bit_generator.state}
+        if self.counts is not None:
+            state.update({
+                "counts": self.counts.tolist(),
+                "means": self.means.tolist(),
+                "last_loss": [float(v) if np.isfinite(v) else None
+                              for v in self.last_loss],
+            })
+        return state
+
+    def load_state(self, state: Dict[str, Any]) -> None:
+        self.rng = np.random.default_rng(self.seed)
+        if "rng_state" in state:
+            self.rng.bit_generator.state = state["rng_state"]
+        if "counts" in state:
+            self.counts = np.asarray(state["counts"], np.int64)
+            self.means = np.asarray(state["means"], np.float64)
+            self.last_loss = np.array(
+                [np.nan if v is None else float(v)
+                 for v in state["last_loss"]])
+        else:
+            # the state of a never-observed policy: loading it is a reset
+            self.counts = self.means = self.last_loss = None
+
+
 @register_policy("grad_norm")
 class GradNormPolicy(AllocationPolicy):
     """Allocation ∝ an EMA of each task's observed mean client-update norm
@@ -565,6 +647,7 @@ __all__ = [
     "PeriodicAuction",
     "RoundContext",
     "RoundObservation",
+    "ThompsonPolicy",
     "UCBBanditPolicy",
     "build_eligibility",
     "incentive_from_spec",

@@ -77,6 +77,11 @@ BUFFER_CONTROLLERS = Registry("buffer_controller")
 # cohort of client deltas folds into the global model — plain/robust
 # weighted reductions and stateful server optimizers (FedAvgM/FedAdam/...)
 AGGREGATORS = Registry("aggregator")
+# client cost models (repro.api.costmodel): how LONG a dispatched job
+# takes — (client, task) -> simulated compute + comm latency (device
+# tiers, heavy-tailed stragglers/dropouts, replayed traces). Arrival
+# processes schedule DISPATCH; cost models determine COMPLETION.
+COST_MODELS = Registry("cost_model")
 
 register_allocator = ALLOCATORS.register
 register_arrival_process = ARRIVAL_PROCESSES.register
@@ -87,6 +92,7 @@ register_policy = POLICIES.register
 register_incentive = INCENTIVES.register
 register_buffer_controller = BUFFER_CONTROLLERS.register
 register_aggregator = AGGREGATORS.register
+register_cost_model = COST_MODELS.register
 
 
 # ------------------------------------------------------- docs generation
@@ -152,6 +158,7 @@ def dump_markdown() -> str:
         ("incentive", INCENTIVES),
         ("buffer_controller", BUFFER_CONTROLLERS),
         ("aggregator", AGGREGATORS),
+        ("cost_model", COST_MODELS),
     ]
     lines = [
         "# Registry reference",

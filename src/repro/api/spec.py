@@ -147,6 +147,14 @@ class RuntimeSpec:
     # e.g. {"lr": 0.1, "eps": 1e-3} for fedadam.
     aggregator: Optional[str] = None
     aggregator_options: Dict[str, Any] = field(default_factory=dict)
+    # client cost model (COST_MODELS registry key: constant | device_tiers
+    # | lognormal_straggler | trace_replay | registered), applied by BOTH
+    # runtimes: arrival processes schedule a job's dispatch, the cost
+    # model determines its completion latency (async event times; sync
+    # per-round clock = max over cohort latencies). None keeps the
+    # bit-exact legacy timing (the "constant" model).
+    cost_model: Optional[str] = None
+    cost_model_options: Dict[str, Any] = field(default_factory=dict)
     # checkpoint/resume — mid-run full-state checkpoints for BOTH engines:
     # the arch sync round loop (every `checkpoint_every` rounds) and the
     # async event engine (every `checkpoint_every` flushes; the whole

@@ -199,6 +199,46 @@ class CheckpointManager:
             tasks[name] = tree
         return step, tasks, meta.get("coordinator", {})
 
+    def begin(self, engine_kind: str, resume: bool,
+              clear_stale: bool = True):
+        """The engines' shared resume preamble (one place instead of a
+        copy per engine): decide between RESUMING from the newest
+        complete step and STARTING FRESH in this directory.
+
+        Returns ``(step, tasks, coordinator_state)`` when ``resume`` is
+        set and a complete step exists — after guarding that the
+        checkpoint was written by the SAME engine kind (``"async"``
+        engines require the ``"async"`` coordinator payload; sync/arch
+        engines refuse one). Resuming across engine kinds would silently
+        retrain AND garbage-collect the foreign run's checkpoints, so it
+        raises instead.
+
+        Returns ``None`` when starting fresh — after clearing any stale
+        step directories (``clear_stale``): ``_gc`` assumes monotonically
+        increasing steps, so leftovers from an earlier run would collect
+        the new run's first checkpoints. Safe even under ``resume=True``:
+        reaching the fresh path means ``latest_step()`` found NO complete
+        step, so anything present is partial junk from a killed save.
+        """
+        if resume and self.latest_step() is not None:
+            step, tasks, coord = self.restore()
+            if engine_kind == "async" and "async" not in coord:
+                raise ValueError(
+                    f"cannot resume: checkpoint step {step} in "
+                    f"{self.dir!r} carries no async engine state (it "
+                    "was written by a different engine); point the "
+                    "async run at its own checkpoint directory")
+            if engine_kind != "async" and "async" in coord:
+                raise ValueError(
+                    f"cannot resume: checkpoint step {step} in "
+                    f"{self.dir!r} was written by the async engine; "
+                    "resume it with mode='async' (or point this run at "
+                    "its own checkpoint directory)")
+            return step, tasks, coord
+        if clear_stale and self.steps():
+            self.clear()
+        return None
+
     def steps(self):
         out = []
         for d in os.listdir(self.dir):

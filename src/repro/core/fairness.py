@@ -32,3 +32,48 @@ def fairness_report(accuracies) -> dict:
         "var_acc": float(a.var()),
         "cosine_uniformity": cosine_uniformity(a),
     }
+
+
+def time_to_accuracy(times, accs, target):
+    """Per-task simulated time at which each task FIRST reaches ``target``
+    accuracy — on the running best, so a transient dip after the hit does
+    not un-reach it. ``times`` is the (T,) simulated clock, ``accs`` the
+    (T, S) accuracy curve; returns a length-S list with ``None`` for
+    tasks that never reach the target."""
+    times = np.asarray(times, np.float64)
+    accs = np.asarray(accs, np.float64)
+    if accs.ndim != 2 or len(times) != len(accs):
+        raise ValueError(
+            f"time_to_accuracy: times {times.shape} and accs {accs.shape} "
+            "must be (T,) and (T, S)")
+    out = []
+    for s in range(accs.shape[1]):
+        best = np.maximum.accumulate(accs[:, s]) if len(accs) else accs[:, s]
+        hit = np.nonzero(best >= target)[0]
+        out.append(float(times[hit[0]]) if len(hit) else None)
+    return out
+
+
+def time_to_accuracy_report(times, accs, target, task_names=None) -> dict:
+    """The wall-clock analogue of ``fairness_report``: per-task
+    time-to-target plus the cross-task spread. The paper's fairness story
+    under heterogeneous clients is exactly this — a policy is unfair in
+    TIME if one task reaches the target much later (or never).
+    ``max_time``/``mean_time``/``var_time`` cover the tasks that reached
+    the target; ``max_time`` is ``None`` unless ALL did (an unreached
+    task makes the worst-case time unbounded)."""
+    per_task = time_to_accuracy(times, accs, target)
+    reached = [t for t in per_task if t is not None]
+    rep = {
+        "target": float(target),
+        "per_task": (per_task if task_names is None
+                     else dict(zip(list(task_names), per_task))),
+        "n_reached": len(reached),
+        "n_unreached": len(per_task) - len(reached),
+        "max_time": (float(max(reached))
+                     if len(reached) == len(per_task) and reached
+                     else None),
+        "mean_time": float(np.mean(reached)) if reached else None,
+        "var_time": float(np.var(reached)) if reached else None,
+    }
+    return rep

@@ -62,6 +62,7 @@ from repro.api.aggregator import aggregator_from_config
 from repro.api.arrivals import get_arrival_process
 from repro.api.backend import ClientBatch, CohortTask, get_backend
 from repro.api.buffer import FlushObservation, get_buffer_controller
+from repro.api.costmodel import get_cost_model
 from repro.api.policy import (AllocationPolicy, RoundContext,
                               stacked_delta_norms)
 from repro.core.allocation import AllocationStrategy
@@ -104,6 +105,12 @@ class AsyncConfig:
     # selects "fedavg" — the bit-exact legacy staleness-weighted mean
     aggregator: Optional[str] = None
     aggregator_options: dict = field(default_factory=dict)
+    # client cost model (api.costmodel COST_MODELS key); None selects
+    # "constant" — the bit-exact legacy work/speed durations. Arrival
+    # processes schedule a job's DISPATCH; the cost model determines its
+    # COMPLETION latency (and may drop a job out entirely).
+    cost_model: Optional[str] = None
+    cost_model_options: dict = field(default_factory=dict)
     # mid-run checkpointing: every `checkpoint_every` FLUSHES the complete
     # engine state (event queue, buffers, retained versions, RNG streams,
     # policy/incentive/controller state) is written to checkpoint_dir;
@@ -264,6 +271,7 @@ class AsyncHistory:
     versions: np.ndarray        # (S,) final model versions
     assignments: List[Tuple[int, int]]  # (client, task) dispatch log
     dropped: int = 0            # updates discarded for exceeding staleness
+    cost_dropouts: int = 0      # jobs the cost model dropped out entirely
     # (F, S) per-task buffer sizes in force AFTER each flush (the buffer
     # controller's emission trajectory; constant rows under "static")
     buffer_sizes: Optional[np.ndarray] = None
@@ -273,12 +281,18 @@ class AsyncHistory:
     acc: np.ndarray = field(init=False)
     min_acc: np.ndarray = field(init=False)
     var_acc: np.ndarray = field(init=False)
+    # (F,) simulated wall clock of each flush. In the async engine the
+    # virtual event time IS the cost-model clock (completion events sit
+    # at dispatch + sampled latency), so this aliases `time`; it exists
+    # so time-to-accuracy reads uniformly across sync and async results.
+    wall_clock_sim: np.ndarray = field(init=False)
 
     def __post_init__(self):
         self.acc = (self.acc_eval if self.acc_eval is not None
                     else 1.0 - self.metric)
         self.min_acc = self.acc.min(axis=1)
         self.var_acc = self.acc.var(axis=1)
+        self.wall_clock_sim = self.time
 
 
 @dataclass
@@ -287,6 +301,10 @@ class _Job:
     task: int
     version: int       # model version the client trained FROM
     dispatch_time: float
+    # sampled at dispatch by the cost model: the job still occupies the
+    # client until its completion event, but contributes NO update — the
+    # engine releases the pinned version and re-enqueues the client
+    dropout: bool = False
 
 
 class AsyncMMFLEngine:
@@ -340,6 +358,19 @@ class AsyncMMFLEngine:
         self.arrival = get_arrival_process(cfg.arrival_process,
                                            cfg.arrival_options)
         self.arrival.reset(self.K, np.random.default_rng(cfg.seed + 2))
+        # client cost model (api.costmodel): samples every dispatched
+        # job's completion latency from its OWN stream (seed + 3), so
+        # enabling one never perturbs the allocator/arrival streams.
+        # "constant" (the default) keeps the legacy work/speed durations
+        # bit-exactly and consumes no RNG. reset() happens in
+        # _init_state / load_state, once the model pytrees exist (the
+        # per-task parameter counts feed FLOP scaling).
+        if cfg.cost_model is None and cfg.cost_model_options:
+            raise ValueError(
+                "cost_model_options were given without a cost_model; "
+                "name one (e.g. 'device_tiers') or drop the options")
+        self.cost_model = get_cost_model(cfg.cost_model or "constant",
+                                         cfg.cost_model_options)
         self.backend = get_backend(cfg.backend)
         # server aggregation rule (api.aggregator); "fedavg" keeps the
         # legacy staleness-weighted mean bit-exactly. Per-task server
@@ -376,12 +407,18 @@ class AsyncMMFLEngine:
         self._retain(s, v, self._params[s])
         self._assignments.append((client, s))
         # the arrival process may defer the job's start (off-window /
-        # partial participation); the model version is pinned at dispatch
+        # partial participation); the model version is pinned at dispatch.
+        # The cost model turns the base work/speed duration into the
+        # job's completion latency (compute + comm) — "constant" returns
+        # it unchanged, so the legacy event trace is bit-identical.
         start = self.arrival.next_start(client, t)
-        dur = self.tasks[s].work / self.speeds[client]
+        base = self.tasks[s].work / self.speeds[client]
+        lat = self.cost_model.sample_latency(client, s, base, time=start,
+                                             version=v)
         self._seq += 1
         heapq.heappush(self._events,
-                       (start + dur, self._seq, _Job(client, s, v, start)))
+                       (start + lat.total, self._seq,
+                        _Job(client, s, v, start, bool(lat.dropout))))
 
     def _flush(self, s: int, t: float):
         cfg = self.cfg
@@ -512,14 +549,31 @@ class AsyncMMFLEngine:
                      if self._has_acc else None)
         self._arrivals = np.zeros(self.S, np.int64)
         self._per_client = np.zeros(self.K, np.int64)
+        self._cost_dropouts = 0
+        self.cost_model.reset(self.K, self.S,
+                              np.random.default_rng(cfg.seed + 3),
+                              task_sizes=self._task_sizes())
 
         for i in range(self.K):              # everyone starts training
             self._dispatch(i, 0.0)
 
+    def _task_sizes(self) -> List[float]:
+        """Per-task parameter counts (cost-model FLOP scaling input)."""
+        return [float(sum(np.size(leaf) for leaf in jax.tree.leaves(p)))
+                for p in self._params]
+
     @staticmethod
     def _job_payload(j: _Job) -> list:
         return [int(j.client), int(j.task), int(j.version),
-                float(j.dispatch_time)]
+                float(j.dispatch_time), bool(j.dropout)]
+
+    @staticmethod
+    def _job_from_payload(p: Sequence) -> _Job:
+        # pre-cost-model checkpoints carry 4-element payloads (no
+        # dropout flag); those jobs never drop out
+        c, s, v, dt = p[:4]
+        return _Job(int(c), int(s), int(v), float(dt),
+                    bool(p[4]) if len(p) > 4 else False)
 
     def state_dict(self) -> Dict:
         """The COMPLETE control state of a mid-run engine, JSON-native:
@@ -538,6 +592,7 @@ class AsyncMMFLEngine:
             "n_flushes": int(self._n_flushes),
             "seq": int(self._seq),
             "dropped": int(self._dropped),
+            "cost_dropouts": int(self._cost_dropouts),
             "version": [int(v) for v in self._version],
             "metric": [float(m) for m in self._metric],
             "acc": (None if self._acc is None
@@ -574,6 +629,10 @@ class AsyncMMFLEngine:
             "eligibility": np.asarray(self.coord.eligibility,
                                       bool).tolist(),
             "arrival": self.arrival.state_dict(),
+            # cost-model sampling state (RNG stream, tier assignments,
+            # trace cursors): a resumed run samples latencies
+            # mid-sequence, event-for-event identical to uninterrupted
+            "cost_model": self.cost_model.state_dict(),
         }
         if self.incentive is not None:
             state["incentive"] = self.incentive.state_dict()
@@ -588,14 +647,15 @@ class AsyncMMFLEngine:
         self._n_flushes = int(state["n_flushes"])
         self._seq = int(state["seq"])
         self._dropped = int(state["dropped"])
+        self._cost_dropouts = int(state.get("cost_dropouts", 0))
         self._version = [int(v) for v in state["version"]]
         self._metric = np.asarray(state["metric"], np.float64)
         self._acc = (None if state["acc"] is None
                      else np.asarray(state["acc"], np.float64))
-        self._events = [(t, int(seq), _Job(int(c), int(s), int(v), dt))
-                        for t, seq, (c, s, v, dt) in state["events"]]
-        self._buffers = [[_Job(int(c), int(s), int(v), dt)
-                          for c, s, v, dt in buf]
+        self._events = [(t, int(seq), self._job_from_payload(payload))
+                        for t, seq, payload in state["events"]]
+        self._buffers = [[self._job_from_payload(payload)
+                          for payload in buf]
                          for buf in state["buffers"]]
         if "aggregator" in state:
             # raises if the checkpoint was written under a different
@@ -636,6 +696,15 @@ class AsyncMMFLEngine:
         self.coord.load_state(state["coordinator"])
         self.coord.eligibility = np.asarray(state["eligibility"], bool)
         self.arrival.load_state(state["arrival"])
+        # reset first (assignments/cursors sized to this run), then
+        # restore the checkpointed sampling state over it; pre-cost-model
+        # checkpoints carry no entry — the fresh reset is exact for
+        # "constant" (stateless), best-effort otherwise
+        self.cost_model.reset(self.K, self.S,
+                              np.random.default_rng(self.cfg.seed + 3),
+                              task_sizes=self._task_sizes())
+        if "cost_model" in state:
+            self.cost_model.load_state(state["cost_model"])
         if self.incentive is not None and "incentive" in state:
             self.incentive.load_state(state["incentive"])
         # a directly-loaded engine (no CheckpointManager involved) must
@@ -671,40 +740,37 @@ class AsyncMMFLEngine:
         if cfg.checkpoint_dir:
             from repro.checkpoint import CheckpointManager
             ckpt = CheckpointManager(cfg.checkpoint_dir)
+        # shared resume preamble (CheckpointManager.begin): resume gate,
+        # foreign-engine guard, stale-step clear. A directly-loaded
+        # engine (load_state with no manager) skips both paths.
         resumed = getattr(self, "_state_loaded", False)
-        if ckpt is not None and cfg.resume \
-                and ckpt.latest_step() is not None:
-            step, trees, coord_state = ckpt.restore()
-            if "async" not in coord_state:
-                # written by a different engine (e.g. the sync arch
-                # loop): starting fresh here would silently retrain AND
-                # garbage-collect the foreign run's checkpoints
-                raise ValueError(
-                    f"cannot resume: checkpoint step {step} in "
-                    f"{cfg.checkpoint_dir!r} carries no async engine "
-                    "state (it was written by a different engine); "
-                    "point the async run at its own checkpoint "
-                    "directory")
-            self.load_state(coord_state["async"], trees)
-            resumed = True
-            if verbose:
-                print(f"resumed from flush {step} "
-                      f"(arrival {self._processed})")
+        if ckpt is not None:
+            hit = ckpt.begin("async", cfg.resume,
+                             clear_stale=not resumed)
+            if hit is not None:
+                step, trees, coord_state = hit
+                self.load_state(coord_state["async"], trees)
+                resumed = True
+                if verbose:
+                    print(f"resumed from flush {step} "
+                          f"(arrival {self._processed})")
         if not resumed:
-            if ckpt is not None and ckpt.steps():
-                # starting over in a used directory: drop stale steps so
-                # retention can't collect the new run's lower-numbered
-                # checkpoints (and leave LATEST dangling). Safe even
-                # under resume=True: reaching here means latest_step()
-                # found NO complete step, so everything present is
-                # partial junk from a killed save.
-                ckpt.clear()
             self._init_state()
         self._state_loaded = False
 
         while self._processed < cfg.total_arrivals and self._events:
             t, _, job = heapq.heappop(self._events)
             self._processed += 1
+            if job.dropout:
+                # cost-model dropout: the client was occupied until now
+                # but contributes NO update — release the pinned model
+                # version and re-enqueue the client on its next fair
+                # assignment. Counts against total_arrivals (the client
+                # spent the time) but not the per-task arrival tallies.
+                self._cost_dropouts += 1
+                self._release(job.task, job.version)
+                self._dispatch(job.client, t)
+                continue
             self._arrivals[job.task] += 1
             self._per_client[job.client] += 1
             self._buffers[job.task].append(job)
@@ -748,6 +814,7 @@ class AsyncMMFLEngine:
             updates_per_client=self._per_client,
             versions=np.array(self._version, np.int64),
             assignments=self._assignments, dropped=self._dropped,
+            cost_dropouts=self._cost_dropouts,
             buffer_sizes=(np.array(self._hist_bufsz, np.int64)
                           .reshape(-1, self.S)),
             acc_eval=(np.array(self._hist_acc).reshape(-1, self.S)

@@ -147,6 +147,13 @@ class TrainConfig:
     # selects "fedavg" — the bit-exact legacy weighted mean
     aggregator: Optional[str] = None
     aggregator_options: dict = field(default_factory=dict)
+    # client cost model (api.costmodel COST_MODELS key); None selects
+    # "constant" (unit job cost). Sync rounds are a lockstep barrier, so
+    # each round's simulated duration is the max over the cohort's
+    # sampled latencies — the History.wall_clock_sim curve. A model's
+    # dropout flag is ignored here (sync stragglers are `dropout_prob`).
+    cost_model: Optional[str] = None
+    cost_model_options: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -154,6 +161,8 @@ class History:
     acc: np.ndarray                     # (rounds, S)
     alloc_counts: np.ndarray            # (rounds, S)
     alloc: Optional[np.ndarray] = None  # (rounds, K) task id / -1 idle
+    # (rounds,) cumulative simulated clock (cost-model round durations)
+    wall_clock_sim: Optional[np.ndarray] = None
     min_acc: np.ndarray = field(init=False)
     var_acc: np.ndarray = field(init=False)
 
@@ -190,6 +199,16 @@ class MMFLTrainer:
         # initialised inside run() so repeated run() calls start fresh.
         self.aggregator = aggregator_from_config(
             cfg.aggregator, cfg.aggregator_options, backend=self.backend)
+        # client cost model (api.costmodel): per-round simulated clock;
+        # "constant" gives every job unit cost. reset() happens in run()
+        # (its own seed + 3 stream; repeated run() calls start fresh).
+        from repro.api.costmodel import get_cost_model
+        if cfg.cost_model is None and cfg.cost_model_options:
+            raise ValueError(
+                "cost_model_options were given without a cost_model; "
+                "name one (e.g. 'device_tiers') or drop the options")
+        self.cost_model = get_cost_model(cfg.cost_model or "constant",
+                                         cfg.cost_model_options)
         # construction-time snapshots: run() restores them so repeated
         # run() calls are identical (the pre-policy contract) even though
         # policy/incentive/eligibility state mutates during a run
@@ -248,10 +267,16 @@ class MMFLTrainer:
         rng = np.random.default_rng(cfg.seed)
         params = self._init_models(jax.random.PRNGKey(cfg.seed))
         server_state = [self.aggregator.init(p) for p in params]
+        self.cost_model.reset(
+            self.K, self.S, np.random.default_rng(cfg.seed + 3),
+            task_sizes=[float(sum(np.size(leaf)
+                                  for leaf in jax.tree.leaves(p)))
+                        for p in params])
+        clock = 0.0
         accs = np.zeros(self.S)
         for s, t in enumerate(self.tasks):
             accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
-        acc_hist, alloc_hist, assign_hist = [], [], []
+        acc_hist, alloc_hist, assign_hist, clock_hist = [], [], [], []
         need_norms = getattr(self.policy, "wants_update_norms", False)
         for r in range(cfg.rounds):
             losses = np.maximum(1.0 - accs, 1e-6)   # paper: use test acc
@@ -268,10 +293,18 @@ class MMFLTrainer:
                 alloc = np.where(failed, -1, alloc)
             counts = np.array([(alloc == s).sum() for s in range(self.S)])
             norms = np.full(self.S, np.nan) if need_norms else None
+            # lockstep barrier: the round costs its slowest sampled
+            # (client, task) latency ("constant": unit cost per job)
+            round_time = 0.0
             for s, t in enumerate(self.tasks):
                 sel_ids = np.where(alloc == s)[0]
                 if len(sel_ids) == 0:
                     continue
+                for i in sel_ids:
+                    round_time = max(
+                        round_time,
+                        self.cost_model.sample_latency(
+                            int(i), s, 1.0, time=clock).total)
                 # cohort execution + aggregation dispatch through the
                 # pluggable backend (serial == pre-backend trace bit-exact)
                 res = self.backend.run_cohort(
@@ -294,10 +327,13 @@ class MMFLTrainer:
             acc_hist.append(accs.copy())
             alloc_hist.append(counts)
             assign_hist.append(alloc.copy())
+            clock += round_time
+            clock_hist.append(clock)
             if verbose and (r + 1) % 10 == 0:
                 print(f"  round {r+1:4d} accs="
                       + " ".join(f"{a:.3f}" for a in accs)
                       + f" min={accs.min():.3f}")
         self.params = params    # final per-task models (RunResult parity)
         return History(np.array(acc_hist), np.array(alloc_hist),
-                       alloc=np.array(assign_hist))
+                       alloc=np.array(assign_hist),
+                       wall_clock_sim=np.asarray(clock_hist, np.float64))

@@ -323,6 +323,9 @@ def build_scenario(args) -> ScenarioSpec:
             aggregator=args.aggregator,
             aggregator_options=json.loads(args.aggregator_options)
             if args.aggregator_options else {},
+            cost_model=args.cost_model,
+            cost_model_options=json.loads(args.cost_model_options)
+            if args.cost_model_options else {},
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
             resume=args.resume))
@@ -385,6 +388,18 @@ def main():
     ap.add_argument("--aggregator-options", default=None,
                     help="JSON dict of aggregator constructor options, "
                          "e.g. '{\"lr\": 0.1}' for --aggregator fedadam")
+    ap.add_argument("--cost-model", default=None, dest="cost_model",
+                    help="client cost model (constant | device_tiers | "
+                         "lognormal_straggler | trace_replay | registered "
+                         "COST_MODELS key): simulated compute+comm "
+                         "latency per job — async completion times, sync "
+                         "per-round clock; default: the bit-exact legacy "
+                         "timing (constant)")
+    ap.add_argument("--cost-model-options", default=None,
+                    dest="cost_model_options",
+                    help="JSON dict of cost-model constructor options, "
+                         "e.g. '{\"sigma\": 0.8, \"dropout_prob\": 0.05}' "
+                         "for --cost-model lognormal_straggler")
     ap.add_argument("--buffer-controller", default=None,
                     help="async: adaptive per-task buffer sizing "
                          "(static | staleness_target | arrival_rate | "
@@ -409,6 +424,7 @@ def main():
         print(f"ASYNC MMFL: {names} buffer={buf} "
               f"controller={spec.runtime.buffer_controller or 'static'} "
               f"aggregator={spec.runtime.aggregator or 'fedavg'} "
+              f"cost_model={spec.runtime.cost_model or 'constant'} "
               f"beta={spec.runtime.beta} "
               f"profile={spec.clients.speed_profile} "
               f"arrival={spec.clients.arrival_process} "

@@ -1,0 +1,327 @@
+"""ClientCostModel axis suite (the sixth registry axis).
+
+The acceptance bar:
+
+  * ``constant`` IS the legacy timing: a spec naming it explicitly equals
+    a spec naming no cost model at all, trace-for-trace, in BOTH runtimes
+    (and the async event times are the legacy work/speed durations);
+  * every built-in model is deterministic given a seed (its own
+    ``seed + 3`` stream), and its sampling state JSON round-trips;
+  * a ``lognormal_straggler`` dropout re-enqueues the client WITHOUT a
+    delta: the accounting identity ``arrivals + cost_dropouts ==
+    total_arrivals`` holds, and an all-dropout run never flushes;
+  * ``trace_replay`` loads byteprofile-style JSON traces and rejects
+    malformed ones with a ValueError naming the defect;
+  * the axis composes: spec JSON round-trip, a custom
+    ``@register_cost_model`` plugin dispatched through run_scenario, and
+    async checkpoint resume under a stochastic model == uninterrupted;
+  * options-without-name validation is uniform across EVERY optional
+    runtime axis (aggregator / buffer_controller / cost_model).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (COST_MODELS, ClientCostModel, ClientPopulationSpec,
+                       DeviceTiers, LatencySample, LognormalStraggler,
+                       RuntimeSpec, ScenarioSpec, TaskSpec, TraceReplay,
+                       get_cost_model, register_cost_model, run_scenario)
+
+
+def spec(mode="async", cost_model=None, options=None, ckpt_dir=None,
+         every=4, resume=False, seed=0, total_arrivals=36):
+    return ScenarioSpec(
+        name="costmodel",
+        seed=seed,
+        tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]}),
+               TaskSpec("synth-fmnist", options={"n_range": [40, 60]})],
+        clients=ClientPopulationSpec(n_clients=10,
+                                     speed_profile="bimodal",
+                                     speed_spread=4.0),
+        runtime=RuntimeSpec(mode=mode, tau=2, rounds=5,
+                            total_arrivals=total_arrivals, buffer_size=3,
+                            cost_model=cost_model,
+                            cost_model_options=dict(options or {}),
+                            checkpoint_dir=ckpt_dir,
+                            checkpoint_every=every,
+                            resume=resume))
+
+
+def assert_runs_equal(a, b):
+    """Full trace equality of two RunResults (either mode)."""
+    np.testing.assert_array_equal(a.loss, b.loss)
+    np.testing.assert_array_equal(a.acc, b.acc)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    if a.time is not None or b.time is not None:
+        np.testing.assert_array_equal(a.time, b.time)
+    if a.wall_clock_sim is not None or b.wall_clock_sim is not None:
+        np.testing.assert_array_equal(a.wall_clock_sim, b.wall_clock_sim)
+    assert a.dropped == b.dropped
+    assert a.cost_dropouts == b.cost_dropouts
+    if a.assignments is not None:
+        assert a.assignments == b.assignments
+
+
+# --------------------------------------------- constant == legacy timing
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_constant_is_bit_exact_legacy(mode):
+    """Naming the 'constant' model explicitly must be indistinguishable
+    from the legacy no-cost-model path — the exp9 BENCH_async.json
+    bit-exactness guarantee, at test scale, in both runtimes."""
+    legacy = run_scenario(spec(mode))
+    explicit = run_scenario(spec(mode, cost_model="constant"))
+    assert_runs_equal(legacy, explicit)
+
+
+def test_constant_async_times_are_work_over_speed():
+    """Under 'constant' the async event times ARE the legacy work/speed
+    durations: a uniform-speed population flushes at unit-job boundaries."""
+    s = spec("async", cost_model="constant")
+    s.clients.speed_profile = "uniform"
+    r = run_scenario(s)
+    # every completion lands on an integer virtual time (work=1, speed=1)
+    assert np.allclose(r.time, np.round(r.time))
+    assert r.cost_dropouts == 0
+
+
+def test_sync_constant_clock_counts_rounds():
+    """'constant' gives every job unit cost, so the sync lockstep clock
+    is simply the round index."""
+    r = run_scenario(spec("sync"))
+    np.testing.assert_allclose(r.wall_clock_sim,
+                               np.arange(1, len(r.loss) + 1))
+
+
+# ----------------------------------------------------------- determinism
+
+@pytest.mark.parametrize("name,options", [
+    ("device_tiers", {}),
+    ("lognormal_straggler", {"sigma": 0.6, "dropout_prob": 0.1}),
+])
+def test_models_are_deterministic_given_seed(name, options):
+    a = run_scenario(spec("async", cost_model=name, options=options))
+    b = run_scenario(spec("async", cost_model=name, options=options))
+    assert_runs_equal(a, b)
+    # and the model stream is independent: a different seed moves the
+    # event times but the spec machinery still runs end-to-end
+    c = run_scenario(spec("async", cost_model=name, options=options,
+                          seed=1))
+    assert not np.array_equal(a.time, c.time)
+
+
+def test_state_dict_round_trips_json():
+    """Every built-in model's sampling state survives state_dict ->
+    JSON -> load_state: subsequent samples are identical."""
+    for name in COST_MODELS.names():
+        model = get_cost_model(name, {"trace": {"latencies": {"*": [1.0, 2.0]}}}
+                               if name == "trace_replay" else {})
+        model.reset(6, 2, np.random.default_rng(7), task_sizes=[10.0, 30.0])
+        clone = get_cost_model(name, {"trace": {"latencies": {"*": [1.0, 2.0]}}}
+                               if name == "trace_replay" else {})
+        clone.reset(6, 2, np.random.default_rng(999))
+        clone.task_sizes = model.task_sizes
+        state = json.loads(json.dumps(model.state_dict()))
+        clone.load_state(state)
+        # re-derive sized members the engines rebuild before load_state
+        for attr in ("_task_cost",):
+            if hasattr(model, attr):
+                setattr(clone, attr, getattr(model, attr))
+        for c in range(6):
+            for s in range(2):
+                a = model.sample_latency(c, s, 1.0)
+                b = clone.sample_latency(c, s, 1.0)
+                assert (a.compute, a.comm, a.dropout) == \
+                       (b.compute, b.comm, b.dropout), name
+
+
+# ------------------------------------------------- dropout re-enqueueing
+
+def test_dropout_accounting_identity():
+    """Each cost-model dropout consumes one arrival slot but contributes
+    no per-task arrival: arrivals + cost_dropouts == total_arrivals."""
+    r = run_scenario(spec("async", cost_model="lognormal_straggler",
+                          options={"sigma": 0.5, "dropout_prob": 0.3}))
+    assert r.cost_dropouts > 0
+    assert int(r.arrivals.sum()) + r.cost_dropouts == 36
+
+
+def test_all_dropouts_never_flush_and_release_versions():
+    """dropout_prob=1: every job drops out, is re-enqueued, and releases
+    its pinned model version — the run processes its whole arrival budget
+    with zero aggregations and no leaked retained versions."""
+    from repro.api import TASK_FAMILIES
+
+    s = spec("async", cost_model="lognormal_straggler",
+             options={"sigma": 0.1, "dropout_prob": 1.0},
+             total_arrivals=20)
+    runner = TASK_FAMILIES.get("synthetic")().async_engine(s)
+    r = runner.run()
+    eng = runner.engine
+    assert r.cost_dropouts == 20
+    assert int(r.arrivals.sum()) == 0
+    assert len(r.time) == 0
+    # only the still-in-flight events pin versions (refcounts balance)
+    pinned = sum(slot[1] for per_task in eng._retained
+                 for slot in per_task.values())
+    assert pinned == len(eng._events)
+
+
+# ------------------------------------------------------------ trace files
+
+def _trace(tmp_path, payload):
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_trace_replay_loads_and_cycles(tmp_path):
+    path = _trace(tmp_path, {"latencies": {"0": [2.0, 4.0], "*": [1.0]}})
+    m = get_cost_model("trace_replay", {"path": path})
+    m.reset(3, 2, np.random.default_rng(0))
+    # client 0 cycles its own sequence; others fall back to "*"
+    assert [m.sample_latency(0, 0, 9.9).compute for _ in range(3)] \
+        == [2.0, 4.0, 2.0]
+    assert m.sample_latency(1, 0, 9.9).compute == 1.0
+
+
+def test_trace_replay_scales_by_task_size(tmp_path):
+    path = _trace(tmp_path, {"latencies": {"*": [2.0]}})
+    m = get_cost_model("trace_replay", {"path": path})
+    m.reset(2, 2, np.random.default_rng(0), task_sizes=[10.0, 30.0])
+    # per-task factors normalise to mean 1: 0.5x and 1.5x
+    assert m.sample_latency(0, 0, 1.0).compute == pytest.approx(1.0)
+    assert m.sample_latency(0, 1, 1.0).compute == pytest.approx(3.0)
+
+
+@pytest.mark.parametrize("payload,match", [
+    ({"no_latencies": True}, "latencies"),
+    ({"latencies": {}}, "non-empty"),
+    ({"latencies": {"0": []}}, "non-empty list"),
+    ({"latencies": {"0": [1.0, -2.0]}}, "positive"),
+    ({"latencies": {"bad-key": [1.0]}}, "client ids"),
+])
+def test_trace_replay_rejects_malformed(tmp_path, payload, match):
+    path = _trace(tmp_path, payload)
+    with pytest.raises(ValueError, match=match):
+        get_cost_model("trace_replay", {"path": path})
+
+
+def test_trace_replay_missing_file_and_coverage(tmp_path):
+    with pytest.raises(ValueError, match="cannot read"):
+        get_cost_model("trace_replay", {"path": str(tmp_path / "nope.json")})
+    m = get_cost_model("trace_replay",
+                       {"trace": {"latencies": {"0": [1.0]}}})
+    with pytest.raises(ValueError, match="no latency sequence"):
+        m.reset(3, 1, np.random.default_rng(0))
+
+
+def test_trace_replay_through_run_scenario(tmp_path):
+    path = _trace(tmp_path, {"latencies": {"*": [0.5, 1.5, 1.0]}})
+    r = run_scenario(spec("async", cost_model="trace_replay",
+                          options={"path": path}))
+    assert len(r.time) > 0 and r.cost_dropouts == 0
+
+
+# -------------------------------------------- spec + registry composition
+
+def test_spec_round_trips_cost_model():
+    s = spec("async", cost_model="device_tiers",
+             options={"comm_scale": 0.5})
+    clone = ScenarioSpec.from_json(s.to_json())
+    assert clone.runtime.cost_model == "device_tiers"
+    assert clone.runtime.cost_model_options == {"comm_scale": 0.5}
+    assert clone.to_dict() == s.to_dict()
+
+
+def test_custom_registered_cost_model_dispatches():
+    @register_cost_model("test_fixed_latency")
+    class FixedLatency(ClientCostModel):
+        """Every job costs exactly 2.5 time units."""
+
+        def sample_latency(self, client, task, base_duration, time=0.0,
+                           version=0):
+            return LatencySample(compute=2.5)
+
+    try:
+        r = run_scenario(spec("sync", cost_model="test_fixed_latency"))
+        np.testing.assert_allclose(
+            r.wall_clock_sim, 2.5 * np.arange(1, len(r.loss) + 1))
+    finally:
+        COST_MODELS._items.pop("test_fixed_latency", None)
+
+
+def test_unknown_model_and_bad_options_fail_loudly():
+    with pytest.raises(KeyError, match="unknown cost_model"):
+        run_scenario(spec("async", cost_model="quantum_tunnel"))
+    with pytest.raises(ValueError, match="device_tiers"):
+        get_cost_model("device_tiers", {"comm_speed": 1.0})  # typo'd option
+    with pytest.raises(ValueError, match="sigma"):
+        get_cost_model("lognormal_straggler", {"sigma": -1.0})
+    with pytest.raises(ValueError, match="fraction"):
+        get_cost_model("device_tiers",
+                       {"tiers": {"x": {"speed": 1.0, "fraction": -1.0}}})
+
+
+@pytest.mark.parametrize("axis,example", [
+    ("aggregator", {"lr": 0.5}),
+    ("buffer_controller", {"target": 1.5}),
+    ("cost_model", {"sigma": 0.5}),
+])
+def test_options_without_name_rejected_per_axis(axis, example):
+    """The consolidated _require_named_options check: options on ANY
+    optional runtime axis without naming an entry fail loudly."""
+    s = spec("async")
+    setattr(s.runtime, f"{axis}_options", example)
+    with pytest.raises(ValueError, match=f"without an? {axis}"):
+        run_scenario(s)
+
+
+def test_time_to_accuracy_fairness_report():
+    from repro.core.fairness import time_to_accuracy_report
+
+    times = [1.0, 2.0, 3.0]
+    accs = [[0.2, 0.1], [0.6, 0.2], [0.5, 0.3]]
+    rep = time_to_accuracy_report(times, accs, 0.55, ["a", "b"])
+    assert rep["per_task"] == {"a": 2.0, "b": None}
+    assert rep["n_reached"] == 1 and rep["n_unreached"] == 1
+    assert rep["max_time"] is None          # an unreached task: unbounded
+    rep2 = time_to_accuracy_report(times, accs, 0.25, ["a", "b"])
+    assert rep2["per_task"] == {"a": 2.0, "b": 3.0}
+    assert rep2["max_time"] == 3.0
+
+
+# ------------------------------------------------------ checkpoint resume
+
+def test_async_resume_with_lognormal_straggler(tmp_path):
+    """Resume == uninterrupted under a STOCHASTIC cost model: the
+    sampling stream, straggler flags, and dropout draws all ride the
+    checkpoint, so the resumed tail replays event-for-event."""
+    d = str(tmp_path / "ck")
+    opts = {"sigma": 0.6, "straggler_frac": 0.3, "dropout_prob": 0.15}
+    full = run_scenario(spec("async", cost_model="lognormal_straggler",
+                             options=opts))
+    ck = run_scenario(spec("async", cost_model="lognormal_straggler",
+                           options=opts, ckpt_dir=d))
+    assert_runs_equal(full, ck)      # checkpointing is observation-free
+    latest = int(open(f"{d}/LATEST").read())
+    assert 0 < latest < len(full.time)
+    resumed = run_scenario(spec("async", cost_model="lognormal_straggler",
+                                options=opts, ckpt_dir=d, resume=True))
+    assert_runs_equal(full, resumed)
+
+
+def test_trace_replay_cursors_survive_resume(tmp_path):
+    """The per-client trace cursors are checkpoint state: a resumed run
+    replays the trace mid-sequence, not from the top."""
+    d = str(tmp_path / "ck")
+    path = _trace(tmp_path, {"latencies": {"*": [0.5, 2.0, 1.0, 3.0]}})
+    opts = {"path": path}
+    full = run_scenario(spec("async", cost_model="trace_replay",
+                             options=opts))
+    run_scenario(spec("async", cost_model="trace_replay", options=opts,
+                      ckpt_dir=d))
+    resumed = run_scenario(spec("async", cost_model="trace_replay",
+                                options=opts, ckpt_dir=d, resume=True))
+    assert_runs_equal(full, resumed)
