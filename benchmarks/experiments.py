@@ -464,6 +464,7 @@ def exp13_aggregators(fast=True, seeds=(0, 1),
         "fedyogi": ("fedyogi", {"lr": 0.1}),
         "fedmedian": ("fedmedian", {}),
         "trimmed_mean": ("trimmed_mean", {"trim": 0.2}),
+        "qfedavg": ("qfedavg", {"q": 1.0}),
     }
     out = {}
     for label, (name, opts) in aggregators.items():
@@ -694,6 +695,62 @@ def exp14_cost_models(fast=True, seeds=(0, 1), target=0.55,
                      "cost_models": {k: [v[0], v[1]]
                                      for k, v in cost_models.items()},
                      "seeds": list(seeds)}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out
+
+
+def exp15_population_scaling(fast=True, json_path="BENCH_population.json"):
+    """Population-subsystem headline: per-round wall time as the client
+    universe grows 10k -> 100k (-> 1M with fast=False) under the
+    vectorized ClientPopulation with lazily-materialized shards — the
+    SAME sync spec through run_scenario with a FIXED absolute cohort
+    (participation = m/N), so per-round work is O(cohort) python plus
+    O(N) vectorized numpy and the per-round figure stays ~flat while N
+    grows 10-100x. (The legacy dict path materializes N upfront client
+    shards — tens of GB at 1M clients — which is exactly what
+    ``lazy_data`` removes.) Timed differentially like exp10
+    (wall(1+R rounds) minus wall(1 round), over R) so O(N) one-off setup
+    (population construction, speed/size draws) is excluded from the
+    per-round figure. Writes BENCH_population.json for the CI artifact
+    trail."""
+    sizes = [10_000, 100_000] if fast else [10_000, 100_000, 1_000_000]
+    rounds = 3 if fast else 6
+    m = 32                                  # fixed absolute cohort
+    out = {}
+    for N in sizes:
+        def make(rounds_):
+            return _scenario(["synth-mnist"], "fedfair", rounds_, 0,
+                             n_range=(40, 60), n_clients=N,
+                             participation=m / N, tau=2,
+                             clients_kw={
+                                 "population": "vectorized",
+                                 "population_options": {"lazy_data": True},
+                             })
+
+        run_scenario(make(1))              # compile warm-up
+        t0 = time.perf_counter()
+        run_scenario(make(1))              # setup + 1 round
+        t1 = time.perf_counter()
+        r = run_scenario(make(1 + rounds))  # setup + 1+R rounds
+        t2 = time.perf_counter()
+        per_round = ((t2 - t1) - (t1 - t0)) / rounds
+        if per_round <= 0:
+            # timing noise swamped the differential (loaded CI host):
+            # fall back to the conservative whole-run upper bound
+            per_round = (t2 - t1) / (1 + rounds)
+        out[f"clients{N}"] = {
+            "s_per_round": per_round,
+            "s_setup": t1 - t0,
+            "final_loss": float(np.asarray(r.loss)[-1, 0]),
+        }
+    base = out[f"clients{sizes[0]}"]["s_per_round"]
+    for N in sizes:
+        out[f"clients{N}"]["round_ratio_vs_smallest"] = (
+            out[f"clients{N}"]["s_per_round"] / max(base, 1e-12))
+    out["config"] = {"sizes": sizes, "rounds": rounds, "cohort": m,
+                     "population": "vectorized", "lazy_data": True}
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)

@@ -64,6 +64,7 @@ def experiment_specs():
         ("exp12_adaptive_buffers", E.exp12_adaptive_buffers),
         ("exp13_aggregators", E.exp13_aggregators),
         ("exp14_cost_models", E.exp14_cost_models),
+        ("exp15_population_scaling", E.exp15_population_scaling),
     ]
 
 

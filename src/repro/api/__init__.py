@@ -52,6 +52,7 @@ from repro.api.registry import (  # noqa: F401
     COST_MODELS,
     INCENTIVES,
     POLICIES,
+    POPULATIONS,
     Registry,
     register_aggregator,
     register_allocator,
@@ -62,6 +63,7 @@ from repro.api.registry import (  # noqa: F401
     register_cost_model,
     register_incentive,
     register_policy,
+    register_population,
     register_task_family,
 )
 from repro.api.aggregator import (  # noqa: F401
@@ -122,6 +124,12 @@ from repro.api.policy import (  # noqa: F401
     build_eligibility,
     incentive_from_spec,
     policy_from_spec,
+)
+from repro.pop import (  # noqa: F401  (registers the "vectorized" population)
+    ClientPopulation,
+    LazyFedTask,
+    VectorizedPopulation,
+    get_population,
 )
 from repro.api.spec import (  # noqa: F401
     AllocationSpec,

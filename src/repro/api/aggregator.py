@@ -60,6 +60,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.registry import AGGREGATORS, register_aggregator
 
@@ -430,6 +431,52 @@ class TrimmedMean(Aggregator):
         return jax.tree.map(tm, stacked_deltas), server_state
 
 
+@register_aggregator("qfedavg")
+class QFedAvg(Aggregator):
+    """q-FedAvg-style fairness-exponent fold (Li et al. 2020,
+    arXiv:1905.10497) adapted to the delta contract: each client's
+    aggregation weight is scaled by ``(|delta| / mean|delta|)^q``, using
+    the update's l2 norm as the local optimality-gap surrogate, then the
+    fold renormalises over the scaled weights. ``q > 0`` boosts clients
+    still far from their optimum (fairness pressure on the worst-off
+    task/client); ``q=0`` degenerates BIT-EXACTLY to fedavg. Under
+    staleness discounting the scaled weight sum is rescaled so the
+    damping ratio (discounted/undiscounted mass) is preserved."""
+
+    name = "qfedavg"
+
+    def __init__(self, q: float = 1.0):
+        super().__init__()
+        if q < 0:
+            raise ValueError(f"qfedavg: q must be >= 0, got {q}")
+        self.q = float(q)
+        self._options = {"q": self.q}
+
+    def aggregate(self, stacked_deltas, weights, server_state,
+                  normalizer=None):
+        backend = self._agg_backend()
+        if self.q == 0.0:
+            agg = backend.aggregate(stacked_deltas, weights,
+                                    normalizer=normalizer)
+            return agg, server_state
+        from repro.api.policy import stacked_delta_norms
+
+        norms = stacked_delta_norms(stacked_deltas)
+        scale = (np.maximum(norms, 1e-12) / max(float(norms.mean()), 1e-12)
+                 ) ** self.q
+        w = np.asarray(weights, np.float64)
+        ws = w * scale
+        norm = None
+        if normalizer is not None:
+            # preserve the staleness damping ratio w.sum()/normalizer
+            norm = float(normalizer) * float(ws.sum()) / max(float(w.sum()),
+                                                             1e-12)
+        agg = backend.aggregate(stacked_deltas,
+                                jnp.asarray(ws, jnp.float32),
+                                normalizer=norm)
+        return agg, server_state
+
+
 # ------------------------------------------------------------ construction
 
 
@@ -471,6 +518,7 @@ __all__ = [
     "FedAvgM",
     "FedMedian",
     "FedYogi",
+    "QFedAvg",
     "TrimmedMean",
     "aggregator_from_config",
     "get_aggregator",

@@ -43,6 +43,19 @@ class ArrivalProcess:
     def next_start(self, client: int, t: float) -> float:
         raise NotImplementedError
 
+    def next_starts(self, clients: np.ndarray, t: float) -> np.ndarray:
+        """Batched ``next_start`` over ``clients`` (client-id order).
+
+        The default delegates to the scalar method one client at a time,
+        so any subclass is automatically batch-capable. Subclasses that
+        override with a vectorized implementation MUST consume their RNG
+        stream exactly as the equivalent sequence of scalar calls would
+        (numpy Generators fill arrays element-sequentially, so e.g. one
+        ``rng.exponential(size=n)`` matches n scalar draws bit-for-bit) —
+        the population parity tests enforce this per registered process.
+        """
+        return np.array([self.next_start(int(c), t) for c in clients], np.float64)
+
     def state_dict(self) -> dict:
         return {"rng_state": self.rng.bit_generator.state}
 
@@ -57,6 +70,9 @@ class AlwaysOn(ArrivalProcess):
 
     def next_start(self, client: int, t: float) -> float:
         return t
+
+    def next_starts(self, clients: np.ndarray, t: float) -> np.ndarray:
+        return np.full(len(clients), float(t), np.float64)
 
 
 @register_arrival_process("bursty")
@@ -86,6 +102,10 @@ class Bursty(ArrivalProcess):
             return t
         return t + (self.period - pos)
 
+    def next_starts(self, clients: np.ndarray, t: float) -> np.ndarray:
+        pos = (t - self._phase[np.asarray(clients, np.int64)]) % self.period
+        return np.where(pos < self.duty * self.period, t, t + (self.period - pos))
+
     def state_dict(self) -> dict:
         state = super().state_dict()
         state["phase"] = self._phase.tolist()
@@ -110,6 +130,12 @@ class PoissonParticipation(ArrivalProcess):
         if self.mean_idle == 0.0:
             return t
         return t + float(self.rng.exponential(self.mean_idle))
+
+    def next_starts(self, clients: np.ndarray, t: float) -> np.ndarray:
+        if self.mean_idle == 0.0:
+            return np.full(len(clients), float(t), np.float64)
+        # one array fill == len(clients) scalar draws on the same stream
+        return t + self.rng.exponential(self.mean_idle, size=len(clients))
 
 
 def get_arrival_process(name: str, options: dict | None = None) -> ArrivalProcess:

@@ -38,6 +38,7 @@ from repro.api.registry import (
     COST_MODELS,
     INCENTIVES,
     POLICIES,
+    POPULATIONS,
     TASK_FAMILIES,
     register_task_family,
 )
@@ -215,6 +216,8 @@ def _train_config(spec: ScenarioSpec) -> TrainConfig:
         aggregator_options=dict(rt.aggregator_options),
         cost_model=rt.cost_model,
         cost_model_options=dict(rt.cost_model_options),
+        population=pop.population,
+        population_options=dict(pop.population_options),
     )
 
 
@@ -239,8 +242,11 @@ def _async_config(spec: ScenarioSpec) -> AsyncConfig:
         aggregator_options=dict(rt.aggregator_options),
         cost_model=rt.cost_model,
         cost_model_options=dict(rt.cost_model_options),
+        population=pop.population,
+        population_options=dict(pop.population_options),
         checkpoint_dir=rt.checkpoint_dir,
         checkpoint_every=rt.checkpoint_every,
+        checkpoint_keep=rt.checkpoint_keep,
         resume=rt.resume,
         backend=rt.backend,
         tau=rt.tau,
@@ -326,6 +332,19 @@ class SyntheticFamily:
     recipe overrides). Seeding matches ``standard_tasks`` exactly."""
 
     def build_tasks(self, spec: ScenarioSpec):
+        # lazily-materialized partitions: with a population configured and
+        # lazy_data on, client shards are generated on first dispatch from
+        # per-client derived streams (repro.pop.data) — O(1) construction
+        # in n_clients instead of an eager (K, n_max, dim) tensor. The
+        # data stream differs from the eager path, so it is opt-in.
+        lazy = spec.clients.population is not None and bool(
+            spec.clients.population_options.get("lazy_data")
+        )
+        ctor = make_synthetic_task
+        if lazy:
+            from repro.pop import LazyFedTask
+
+            ctor = LazyFedTask
         tasks = []
         for i, ts in enumerate(spec.tasks):
             base = ts.name.split("#")[0]
@@ -337,7 +356,7 @@ class SyntheticFamily:
             if "n_range" in kw:
                 kw["n_range"] = tuple(kw["n_range"])
             tasks.append(
-                make_synthetic_task(
+                ctor(
                     task_seed(spec.data_seed, i),
                     ts.name,
                     spec.clients.n_clients,
@@ -455,12 +474,28 @@ class ArchSyncEngine:
         self._eval_acc = {a: make_arch_eval(tasks[a], data[a])[1] for a in self.names}
         # client cost model (api.costmodel): each round's simulated
         # duration is the max over the cohort's sampled latencies (the
-        # lockstep barrier); "constant" gives every job unit cost
-        from repro.api.costmodel import get_cost_model
+        # lockstep barrier); "constant" gives every job unit cost. With a
+        # population configured, the population owns the cost model (and
+        # the eligibility struct-of-arrays) and the engine aliases it.
+        self.population = None
+        if spec.clients.population is not None:
+            from repro.pop import get_population
 
-        self.cost_model = get_cost_model(
-            spec.runtime.cost_model or "constant",
-            spec.runtime.cost_model_options)
+            self.population = get_population(
+                spec.clients.population,
+                spec.clients.population_options,
+                n_clients=spec.clients.n_clients,
+                n_tasks=len(self.names),
+                seed=spec.seed,
+                cost_model=spec.runtime.cost_model,
+                cost_model_options=spec.runtime.cost_model_options)
+            self.cost_model = self.population.cost_model
+        else:
+            from repro.api.costmodel import get_cost_model
+
+            self.cost_model = get_cost_model(
+                spec.runtime.cost_model or "constant",
+                spec.runtime.cost_model_options)
         self.coord = MMFLCoordinator(
             task_names=self.names,
             n_clients=spec.clients.n_clients,
@@ -471,7 +506,18 @@ class ArchSyncEngine:
             eligibility=eligibility,
             policy=policy_from_spec(spec.policy, spec.allocation.strategy),
         )
+        if self.population is not None:
+            self.coord.eligibility = self.population.set_eligibility(
+                self.coord.eligibility)
         self.incentive = incentive
+
+    def _set_eligibility(self, elig) -> np.ndarray:
+        """Adopt a (K, S) eligibility matrix, mirroring it into the
+        population's struct-of-arrays when one is configured."""
+        elig = np.asarray(elig, bool)
+        if self.population is not None:
+            return self.population.set_eligibility(elig)
+        return elig
 
     def _acc_of(self, name: str) -> float:
         """Current next-token eval accuracy of one task's global params."""
@@ -542,7 +588,8 @@ class ArchSyncEngine:
         if rt.checkpoint_dir:
             from repro.checkpoint import CheckpointManager
 
-            ckpt = CheckpointManager(rt.checkpoint_dir)
+            ckpt = CheckpointManager(rt.checkpoint_dir,
+                                     keep=rt.checkpoint_keep)
             # shared resume preamble (CheckpointManager.begin): resume
             # gate, foreign-engine guard, stale-step clear
             hit = ckpt.begin("sync", rt.resume)
@@ -567,10 +614,13 @@ class ArchSyncEngine:
                     rng.bit_generator.state = coord_state["data_rng"]
                     # incentive ledger + re-auctioned eligibility, so
                     # resumed recruitment is budget- and schedule-exact
+                    if "population" in coord_state and self.population is not None:
+                        self.population.validate_config(coord_state["population"])
                     if self.incentive is not None and "incentive" in coord_state:
                         self.incentive.load_state(coord_state["incentive"])
                         if self.incentive.eligibility is not None:
-                            self.coord.eligibility = np.asarray(self.incentive.eligibility, bool)
+                            self.coord.eligibility = self._set_eligibility(
+                                self.incentive.eligibility)
                     # pre-checkpoint curves, so the RunResult covers the
                     # WHOLE run, not just the post-resume tail
                     hist = coord_state.get("history", {})
@@ -612,7 +662,7 @@ class ArchSyncEngine:
                     )
                 )
                 if upd is not None:
-                    self.coord.eligibility = np.asarray(upd.eligibility, bool)
+                    self.coord.eligibility = self._set_eligibility(upd.eligibility)
             alloc = self.coord.next_round()
             t0 = time.time()
             line = []
@@ -627,11 +677,17 @@ class ArchSyncEngine:
                     line.append(f"{a}: -")
                     continue
                 row[ids] = s
-                for i in ids:
-                    round_time = max(
-                        round_time,
-                        self.cost_model.sample_latency(
-                            int(i), s, 1.0, time=clock).total)
+                if self.population is not None:
+                    # cohort-batched latency sampling (same stream order)
+                    totals, _ = self.population.sample_latencies(
+                        ids, s, 1.0, times=clock)
+                    round_time = max(round_time, float(totals.max()))
+                else:
+                    for i in ids:
+                        round_time = max(
+                            round_time,
+                            self.cost_model.sample_latency(
+                                int(i), s, 1.0, time=clock).total)
                 loss, norm = self._run_task_round(a, ids, rng, want_norms)
                 if want_norms and norm is not None:
                     norms[s] = norm
@@ -664,6 +720,9 @@ class ArchSyncEngine:
                     "aggregator": self.aggregator.state_dict(),
                     "cost_model": self.cost_model.state_dict(),
                 }
+                if self.population is not None:
+                    coord_payload["population"] = \
+                        self.population.config_record()
                 if self.incentive is not None:
                     coord_payload["incentive"] = self.incentive.state_dict()
                 ckpt.save(
@@ -716,17 +775,20 @@ def _require_named_options(spec: ScenarioSpec) -> None:
     once an entry is named — silently ignoring them would hide typos."""
     rt = spec.runtime
     axes = [
-        ("aggregator", rt.aggregator, rt.aggregator_options, "fedadam"),
-        ("buffer_controller", rt.buffer_controller,
+        ("runtime", "aggregator", rt.aggregator, rt.aggregator_options,
+         "fedadam"),
+        ("runtime", "buffer_controller", rt.buffer_controller,
          rt.buffer_controller_options, "staleness_target"),
-        ("cost_model", rt.cost_model, rt.cost_model_options,
+        ("runtime", "cost_model", rt.cost_model, rt.cost_model_options,
          "device_tiers"),
+        ("clients", "population", spec.clients.population,
+         spec.clients.population_options, "vectorized"),
     ]
-    for axis, name, options, example in axes:
+    for scope, axis, name, options, example in axes:
         if name is None and options:
             article = "an" if axis[0] in "aeiou" else "a"
             raise ValueError(
-                f"runtime.{axis}_options were given without {article} "
+                f"{scope}.{axis}_options were given without {article} "
                 f"{axis}; name one (e.g. {example!r}) or drop the "
                 "options")
 
@@ -761,6 +823,8 @@ def run_scenario(spec: ScenarioSpec, verbose: bool = False) -> RunResult:
         AGGREGATORS.get(spec.runtime.aggregator)
     if spec.runtime.cost_model is not None:
         COST_MODELS.get(spec.runtime.cost_model)
+    if spec.clients.population is not None:
+        POPULATIONS.get(spec.clients.population)
     _require_named_options(spec)
     auction_summary = None
     eligibility = None

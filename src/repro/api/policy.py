@@ -451,6 +451,24 @@ def _bids_exp4(rng, n, S):
 BID_MODELS["exp4"] = _bids_exp4
 
 
+def draw_bids(auction, n_clients: int, n_tasks: int, seed_offset: int = 0) -> np.ndarray:
+    """One vectorized bid matrix (K, S) for an ``AuctionSpec``: explicit
+    ``bids`` verbatim, otherwise the named bid model on its own Generator
+    (``bid_seed + seed_offset``). This is the single bid-evaluation op the
+    population subsystem feeds to ``core/auctions.py``."""
+    if auction.bids is not None:
+        bids = np.asarray(auction.bids, np.float64)
+        if bids.shape != (n_clients, n_tasks):
+            raise ValueError(f"explicit bids shape {bids.shape} != ({n_clients}, {n_tasks})")
+        return bids
+    try:
+        model = BID_MODELS[auction.bid_model]
+    except KeyError:
+        known = ", ".join(sorted(BID_MODELS))
+        raise KeyError(f"unknown bid model {auction.bid_model!r}; known: {known}") from None
+    return model(np.random.default_rng(auction.bid_seed + seed_offset), n_clients, n_tasks)
+
+
 def build_eligibility(auction, n_clients: int, n_tasks: int, budget=None, seed_offset: int = 0):
     """Run the named auction; returns (eligibility (K, S) bool, result).
 
@@ -458,17 +476,7 @@ def build_eligibility(auction, n_clients: int, n_tasks: int, budget=None, seed_o
     re-auction against a remaining-budget ledger with fresh bid draws; the
     defaults reproduce the legacy one-shot round-0 call bit-exactly.
     """
-    if auction.bids is not None:
-        bids = np.asarray(auction.bids, np.float64)
-        if bids.shape != (n_clients, n_tasks):
-            raise ValueError(f"explicit bids shape {bids.shape} != ({n_clients}, {n_tasks})")
-    else:
-        try:
-            model = BID_MODELS[auction.bid_model]
-        except KeyError:
-            known = ", ".join(sorted(BID_MODELS))
-            raise KeyError(f"unknown bid model {auction.bid_model!r}; known: {known}") from None
-        bids = model(np.random.default_rng(auction.bid_seed + seed_offset), n_clients, n_tasks)
+    bids = draw_bids(auction, n_clients, n_tasks, seed_offset)
     mech = AUCTIONS.get(auction.mechanism)
     res = mech(
         bids,
@@ -476,10 +484,11 @@ def build_eligibility(auction, n_clients: int, n_tasks: int, budget=None, seed_o
         rng=np.random.default_rng(auction.bid_seed + seed_offset + 1),
         **auction.options,
     )
+    # per-task winner scatter (vectorized; winners lists stay ragged)
     elig = np.zeros((n_clients, n_tasks), bool)
     for s, ws in enumerate(res.winners):
-        for u in ws:
-            elig[u, s] = True
+        if len(ws):
+            elig[np.asarray(ws, np.int64), s] = True
     return elig, res
 
 
@@ -650,6 +659,7 @@ __all__ = [
     "ThompsonPolicy",
     "UCBBanditPolicy",
     "build_eligibility",
+    "draw_bids",
     "incentive_from_spec",
     "policy_from_spec",
     "stacked_delta_norms",

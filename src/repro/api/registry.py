@@ -82,6 +82,11 @@ AGGREGATORS = Registry("aggregator")
 # tiers, heavy-tailed stragglers/dropouts, replayed traces). Arrival
 # processes schedule DISPATCH; cost models determine COMPLETION.
 COST_MODELS = Registry("cost_model")
+# client populations (repro.pop): ALL per-client state — eligibility,
+# arrival streams, auction bids, cost sampling, data partitions — held
+# as struct-of-arrays so simulations scale to 100k-1M clients; the
+# "vectorized" built-in is bit-exact with the legacy dict path at any N.
+POPULATIONS = Registry("population")
 
 register_allocator = ALLOCATORS.register
 register_arrival_process = ARRIVAL_PROCESSES.register
@@ -93,6 +98,7 @@ register_incentive = INCENTIVES.register
 register_buffer_controller = BUFFER_CONTROLLERS.register
 register_aggregator = AGGREGATORS.register
 register_cost_model = COST_MODELS.register
+register_population = POPULATIONS.register
 
 
 # ------------------------------------------------------- docs generation
@@ -159,6 +165,7 @@ def dump_markdown() -> str:
         ("buffer_controller", BUFFER_CONTROLLERS),
         ("aggregator", AGGREGATORS),
         ("cost_model", COST_MODELS),
+        ("population", POPULATIONS),
     ]
     lines = [
         "# Registry reference",
@@ -184,6 +191,20 @@ def dump_markdown() -> str:
                 f"| `{name}` | {_entry_options(obj)} | {_entry_summary(obj)} |"
             )
         lines.append("")
+    lines += [
+        "## Runtime defaults",
+        "",
+        "* `runtime.buffer_size` left unset derives a backend-aware default via",
+        "  `resolve_buffer_size`: 4 (the FedAST paper default) on the `serial`",
+        "  backend and custom backends, `max(4, jax.device_count())` on `vmap`/",
+        "  `sharded` so a flush can fill the device mesh. An explicit value must",
+        "  be >= 1.",
+        "* `clients.population` selects a registered population (`vectorized`)",
+        "  that holds all per-client state as struct-of-arrays; options such as",
+        '  `{"lazy_data": true}` go in `clients.population_options` and require',
+        "  a named population.",
+        "",
+    ]
     return "\n".join(lines)
 
 

@@ -60,6 +60,13 @@ class ClientPopulationSpec:
     # async availability plugin (ARRIVAL_PROCESSES key)
     arrival_process: str = "always_on"
     arrival_options: Dict[str, Any] = field(default_factory=dict)
+    # vectorized population subsystem (POPULATIONS key, e.g. "vectorized"):
+    # holds ALL per-client state — eligibility, arrival streams, bids,
+    # cost sampling and (with {"lazy_data": true}) on-demand data shards —
+    # as struct-of-arrays, scaling scenarios to 100k-1M clients. None
+    # keeps the legacy dict path; "vectorized" is bit-exact with it.
+    population: Optional[str] = None
+    population_options: Dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass
@@ -163,6 +170,9 @@ class RuntimeSpec:
     # uninterrupted one)
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 10
+    # retention: the CheckpointManager keeps the newest `checkpoint_keep`
+    # complete steps and garbage-collects older ones after each save
+    checkpoint_keep: int = 3
     resume: bool = False
 
     def __post_init__(self):

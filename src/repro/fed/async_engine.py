@@ -111,6 +111,11 @@ class AsyncConfig:
     # COMPLETION latency (and may drop a job out entirely).
     cost_model: Optional[str] = None
     cost_model_options: dict = field(default_factory=dict)
+    # vectorized client population (repro.pop POPULATIONS key); None keeps
+    # the legacy per-client state, "vectorized" is bit-exact with it while
+    # scaling initial dispatch + state to 100k-1M clients
+    population: Optional[str] = None
+    population_options: dict = field(default_factory=dict)
     # mid-run checkpointing: every `checkpoint_every` FLUSHES the complete
     # engine state (event queue, buffers, retained versions, RNG streams,
     # policy/incentive/controller state) is written to checkpoint_dir;
@@ -118,6 +123,8 @@ class AsyncConfig:
     # event-for-event identically to an uninterrupted run
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 10
+    # retention: keep the newest `checkpoint_keep` steps, GC the rest
+    checkpoint_keep: int = 3
     resume: bool = False
     # cohort execution backend (api.backend BACKENDS key or instance)
     backend: str = "serial"
@@ -350,27 +357,56 @@ class AsyncMMFLEngine:
         # per-flush re-recruitment (api.policy.IncentiveMechanism); the
         # legacy one_shot mechanism never updates after round 0
         self.incentive = incentive
-        self.speeds = client_speeds(
-            cfg.speed_profile, self.K, np.random.default_rng(cfg.seed + 1),
-            spread=cfg.speed_spread, slow_fraction=cfg.slow_fraction)
-        # availability plugin draws from its OWN stream (seed + 2) so
-        # enabling one never perturbs the allocator's RNG
-        self.arrival = get_arrival_process(cfg.arrival_process,
-                                           cfg.arrival_options)
-        self.arrival.reset(self.K, np.random.default_rng(cfg.seed + 2))
-        # client cost model (api.costmodel): samples every dispatched
-        # job's completion latency from its OWN stream (seed + 3), so
-        # enabling one never perturbs the allocator/arrival streams.
-        # "constant" (the default) keeps the legacy work/speed durations
-        # bit-exactly and consumes no RNG. reset() happens in
-        # _init_state / load_state, once the model pytrees exist (the
-        # per-task parameter counts feed FLOP scaling).
-        if cfg.cost_model is None and cfg.cost_model_options:
+        # per-client state: the legacy path builds speeds (seed + 1), the
+        # arrival process (seed + 2) and the cost model here; with a
+        # population configured the population object OWNS all three
+        # (seeded identically, drawn in the same client order — bit-exact)
+        # and the engine aliases them so every call site below is shared.
+        if cfg.population is None and cfg.population_options:
             raise ValueError(
-                "cost_model_options were given without a cost_model; "
-                "name one (e.g. 'device_tiers') or drop the options")
-        self.cost_model = get_cost_model(cfg.cost_model or "constant",
-                                         cfg.cost_model_options)
+                "population_options were given without a population; "
+                "name one (e.g. 'vectorized') or drop the options")
+        self.population = None
+        if cfg.population is not None:
+            from repro.pop import get_population
+            self.population = get_population(
+                cfg.population, cfg.population_options,
+                n_clients=self.K, n_tasks=self.S, seed=cfg.seed,
+                speed_profile=cfg.speed_profile,
+                speed_spread=cfg.speed_spread,
+                slow_fraction=cfg.slow_fraction,
+                arrival_process=cfg.arrival_process,
+                arrival_options=cfg.arrival_options,
+                cost_model=cfg.cost_model,
+                cost_model_options=cfg.cost_model_options)
+            self.speeds = self.population.speeds
+            self.arrival = self.population.arrival
+            self.cost_model = self.population.cost_model
+            self.coord.eligibility = self.population.set_eligibility(
+                self.coord.eligibility)
+        else:
+            self.speeds = client_speeds(
+                cfg.speed_profile, self.K,
+                np.random.default_rng(cfg.seed + 1),
+                spread=cfg.speed_spread, slow_fraction=cfg.slow_fraction)
+            # availability plugin draws from its OWN stream (seed + 2) so
+            # enabling one never perturbs the allocator's RNG
+            self.arrival = get_arrival_process(cfg.arrival_process,
+                                               cfg.arrival_options)
+            self.arrival.reset(self.K, np.random.default_rng(cfg.seed + 2))
+            # client cost model (api.costmodel): samples every dispatched
+            # job's completion latency from its OWN stream (seed + 3), so
+            # enabling one never perturbs the allocator/arrival streams.
+            # "constant" (the default) keeps the legacy work/speed
+            # durations bit-exactly and consumes no RNG. reset() happens
+            # in _init_state / load_state, once the model pytrees exist
+            # (the per-task parameter counts feed FLOP scaling).
+            if cfg.cost_model is None and cfg.cost_model_options:
+                raise ValueError(
+                    "cost_model_options were given without a cost_model; "
+                    "name one (e.g. 'device_tiers') or drop the options")
+            self.cost_model = get_cost_model(cfg.cost_model or "constant",
+                                             cfg.cost_model_options)
         self.backend = get_backend(cfg.backend)
         # server aggregation rule (api.aggregator); "fedavg" keeps the
         # legacy staleness-weighted mean bit-exactly. Per-task server
@@ -419,6 +455,49 @@ class AsyncMMFLEngine:
         heapq.heappush(self._events,
                        (start + lat.total, self._seq,
                         _Job(client, s, v, start, bool(lat.dropout))))
+
+    def _dispatch_all(self, clients, t: float):
+        """Population-batched dispatch of many clients at one virtual time
+        (the initial everyone-starts-training wave). Assignment stays a
+        per-client coordinator walk (its RNG order is the contract), but
+        the arrival and cost draws batch into ONE vectorized call per
+        stream — each stream still sees the same client-id-ordered draw
+        sequence as the scalar loop, so the event trace is bit-identical
+        while the per-client Python work drops to the assignment walk."""
+        assigned = []
+        for i in clients:
+            s = self.coord.assign_next(int(i))
+            if s is None:
+                continue                 # not eligible for anything: idle
+            v = self._version[s]
+            self._retain(s, v, self._params[s])
+            self._assignments.append((int(i), s))
+            assigned.append((int(i), s, v))
+        if not assigned:
+            return
+        ids = np.array([a[0] for a in assigned], np.int64)
+        tasks = np.array([a[1] for a in assigned], np.int64)
+        vers = np.array([a[2] for a in assigned], np.int64)
+        starts = self.population.next_arrivals(ids, t)
+        works = np.array([self.tasks[s].work for s in tasks], np.float64)
+        totals, drops = self.population.sample_latencies(
+            ids, tasks, works / self.speeds[ids], times=starts,
+            versions=vers)
+        for k in range(len(assigned)):
+            self._seq += 1
+            heapq.heappush(
+                self._events,
+                (starts[k] + totals[k], self._seq,
+                 _Job(int(ids[k]), int(tasks[k]), int(vers[k]),
+                      float(starts[k]), bool(drops[k]))))
+
+    def _set_eligibility(self, elig) -> np.ndarray:
+        """Adopt a (K, S) eligibility matrix, mirroring it into the
+        population's struct-of-arrays when one is configured."""
+        elig = np.asarray(elig, bool)
+        if self.population is not None:
+            return self.population.set_eligibility(elig)
+        return elig
 
     def _flush(self, s: int, t: float):
         cfg = self.cfg
@@ -494,8 +573,8 @@ class AsyncMMFLEngine:
                     n_clients=self.K,
                     eligibility=self.coord.eligibility))
                 if upd is not None:
-                    self.coord.eligibility = np.asarray(upd.eligibility,
-                                                        bool)
+                    self.coord.eligibility = self._set_eligibility(
+                        upd.eligibility)
             if self._has_acc:
                 self._acc[s] = float(task.accuracy(self._params[s]))
                 self._hist_acc.append(self._acc.copy())
@@ -554,8 +633,11 @@ class AsyncMMFLEngine:
                               np.random.default_rng(cfg.seed + 3),
                               task_sizes=self._task_sizes())
 
-        for i in range(self.K):              # everyone starts training
-            self._dispatch(i, 0.0)
+        if self.population is not None:      # everyone starts training:
+            self._dispatch_all(range(self.K), 0.0)   # batched, bit-exact
+        else:
+            for i in range(self.K):
+                self._dispatch(i, 0.0)
 
     def _task_sizes(self) -> List[float]:
         """Per-task parameter counts (cost-model FLOP scaling input)."""
@@ -634,6 +716,11 @@ class AsyncMMFLEngine:
             # mid-sequence, event-for-event identical to uninterrupted
             "cost_model": self.cost_model.state_dict(),
         }
+        if self.population is not None:
+            # config stamp only: the population's mutable state (arrival
+            # + cost streams, eligibility) is already captured above via
+            # the aliased objects; load_state re-syncs the SoA matrix
+            state["population"] = self.population.config_record()
         if self.incentive is not None:
             state["incentive"] = self.incentive.state_dict()
         return state
@@ -694,7 +781,9 @@ class AsyncMMFLEngine:
         self._buffer_sizes = np.asarray(state["buffer_sizes"], np.int64)
         self.controller.load_state(state["controller"])
         self.coord.load_state(state["coordinator"])
-        self.coord.eligibility = np.asarray(state["eligibility"], bool)
+        if self.population is not None and "population" in state:
+            self.population.validate_config(state["population"])
+        self.coord.eligibility = self._set_eligibility(state["eligibility"])
         self.arrival.load_state(state["arrival"])
         # reset first (assignments/cursors sized to this run), then
         # restore the checkpointed sampling state over it; pre-cost-model
@@ -739,7 +828,8 @@ class AsyncMMFLEngine:
         ckpt = None
         if cfg.checkpoint_dir:
             from repro.checkpoint import CheckpointManager
-            ckpt = CheckpointManager(cfg.checkpoint_dir)
+            ckpt = CheckpointManager(cfg.checkpoint_dir,
+                                     keep=cfg.checkpoint_keep)
         # shared resume preamble (CheckpointManager.begin): resume gate,
         # foreign-engine guard, stale-step clear. A directly-loaded
         # engine (load_state with no manager) skips both paths.

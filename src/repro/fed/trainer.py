@@ -111,6 +111,14 @@ def fed_client_batch(task: FedTask, key, client_ids) -> ClientBatch:
     backend (and the sync/async drivers) computes identical results."""
     ids = np.asarray(client_ids, np.int32)
     keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(jnp.asarray(ids))
+    if hasattr(task, "gather"):
+        # lazily-materialized partitions (repro.pop.data.LazyFedTask):
+        # rows are generated/cached on first dispatch instead of fancy-
+        # indexing an eager (K, n_max, dim) tensor
+        x, y, w = task.gather(ids)
+        return ClientBatch(client_ids=ids, keys=keys,
+                           data=(jnp.asarray(x), jnp.asarray(y),
+                                 jnp.asarray(w)))
     return ClientBatch(
         client_ids=ids,
         keys=keys,
@@ -154,6 +162,10 @@ class TrainConfig:
     # dropout flag is ignored here (sync stragglers are `dropout_prob`).
     cost_model: Optional[str] = None
     cost_model_options: dict = field(default_factory=dict)
+    # vectorized client population (repro.pop POPULATIONS key); None keeps
+    # the legacy per-client state, "vectorized" is bit-exact with it
+    population: Optional[str] = None
+    population_options: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -202,13 +214,31 @@ class MMFLTrainer:
         # client cost model (api.costmodel): per-round simulated clock;
         # "constant" gives every job unit cost. reset() happens in run()
         # (its own seed + 3 stream; repeated run() calls start fresh).
-        from repro.api.costmodel import get_cost_model
-        if cfg.cost_model is None and cfg.cost_model_options:
+        # With a population configured, the population OWNS the cost model
+        # (and all other per-client state); the trainer aliases it so the
+        # reset/sample call sites below are unchanged.
+        if cfg.population is None and cfg.population_options:
             raise ValueError(
-                "cost_model_options were given without a cost_model; "
-                "name one (e.g. 'device_tiers') or drop the options")
-        self.cost_model = get_cost_model(cfg.cost_model or "constant",
-                                         cfg.cost_model_options)
+                "population_options were given without a population; "
+                "name one (e.g. 'vectorized') or drop the options")
+        self.population = None
+        if cfg.population is not None:
+            from repro.pop import get_population
+            self.population = get_population(
+                cfg.population, cfg.population_options,
+                n_clients=self.K, n_tasks=self.S, seed=cfg.seed,
+                cost_model=cfg.cost_model,
+                cost_model_options=cfg.cost_model_options)
+            self.cost_model = self.population.cost_model
+            self.elig = self.population.set_eligibility(self.elig)
+        else:
+            from repro.api.costmodel import get_cost_model
+            if cfg.cost_model is None and cfg.cost_model_options:
+                raise ValueError(
+                    "cost_model_options were given without a cost_model; "
+                    "name one (e.g. 'device_tiers') or drop the options")
+            self.cost_model = get_cost_model(cfg.cost_model or "constant",
+                                             cfg.cost_model_options)
         # construction-time snapshots: run() restores them so repeated
         # run() calls are identical (the pre-policy contract) even though
         # policy/incentive/eligibility state mutates during a run
@@ -221,6 +251,14 @@ class MMFLTrainer:
         return init_task_models(self.tasks, key, self.cfg.hidden,
                                 self.cfg.depth, self.cfg.deep_for,
                                 self.cfg.deep_depth)
+
+    def _set_elig(self, elig) -> np.ndarray:
+        """Adopt a (K, S) eligibility matrix, mirroring it into the
+        population's struct-of-arrays when one is configured."""
+        elig = np.asarray(elig, bool)
+        if self.population is not None:
+            return self.population.set_eligibility(elig)
+        return elig
 
     def _allocate(self, rng, losses, round_idx):
         """Per-client task assignment, honouring eligibility. The policy
@@ -260,7 +298,7 @@ class MMFLTrainer:
         cfg = self.cfg
         # reproducibility: every run() starts from the construction-time
         # allocation/incentive state, so run() twice == run() once twice
-        self.elig = self._elig0.copy()
+        self.elig = self._set_elig(self._elig0.copy())
         self.policy.load_state(self._policy_state0)
         if self.incentive is not None:
             self.incentive.load_state(self._incentive_state0)
@@ -286,7 +324,7 @@ class MMFLTrainer:
                     alpha=cfg.alpha, n_clients=self.K,
                     eligibility=self.elig))
                 if upd is not None:
-                    self.elig = np.asarray(upd.eligibility, bool)
+                    self.elig = self._set_elig(upd.eligibility)
             alloc = self._allocate(rng, losses, r)
             if cfg.dropout_prob > 0:
                 failed = rng.random(self.K) < cfg.dropout_prob
@@ -300,11 +338,17 @@ class MMFLTrainer:
                 sel_ids = np.where(alloc == s)[0]
                 if len(sel_ids) == 0:
                     continue
-                for i in sel_ids:
-                    round_time = max(
-                        round_time,
-                        self.cost_model.sample_latency(
-                            int(i), s, 1.0, time=clock).total)
+                if self.population is not None:
+                    # cohort-batched latency sampling (same stream order)
+                    totals, _ = self.population.sample_latencies(
+                        sel_ids, s, 1.0, times=clock)
+                    round_time = max(round_time, float(totals.max()))
+                else:
+                    for i in sel_ids:
+                        round_time = max(
+                            round_time,
+                            self.cost_model.sample_latency(
+                                int(i), s, 1.0, time=clock).total)
                 # cohort execution + aggregation dispatch through the
                 # pluggable backend (serial == pre-backend trace bit-exact)
                 res = self.backend.run_cohort(

@@ -308,7 +308,10 @@ def build_scenario(args) -> ScenarioSpec:
             participation=args.participation,
             speed_profile=args.speed_profile,
             speed_spread=args.speed_spread,
-            arrival_process=args.arrival_process),
+            arrival_process=args.arrival_process,
+            population=args.population,
+            population_options=json.loads(args.population_options)
+            if args.population_options else {}),
         allocation=AllocationSpec(strategy=args.strategy, alpha=args.alpha),
         policy=PolicySpec(name=args.policy) if args.policy else None,
         runtime=RuntimeSpec(
@@ -328,6 +331,7 @@ def build_scenario(args) -> ScenarioSpec:
             if args.cost_model_options else {},
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
+            checkpoint_keep=args.checkpoint_keep,
             resume=args.resume))
 
 
@@ -363,6 +367,10 @@ def main():
                     default=10, dest="checkpoint_every",
                     help="rounds (sync) / flushes (async) between "
                          "checkpoints")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    dest="checkpoint_keep",
+                    help="checkpoint retention: keep the newest N complete "
+                         "steps in --checkpoint-dir, GC older ones")
     ap.add_argument("--resume", action="store_true",
                     help="resume from the latest checkpoint in "
                          "--checkpoint-dir (async resume is "
@@ -411,6 +419,16 @@ def main():
     ap.add_argument("--arrival-process", default="always_on",
                     help="async availability plugin "
                          "(always_on | bursty | poisson | registered)")
+    ap.add_argument("--population", default=None,
+                    help="client population plugin (vectorized | "
+                         "registered POPULATIONS key): struct-of-arrays "
+                         "per-client state, bit-exact with the legacy "
+                         "dict path and required for very large N")
+    ap.add_argument("--population-options", default=None,
+                    dest="population_options",
+                    help="JSON dict of population constructor options, "
+                         "e.g. '{\"lazy_data\": true}' to materialize "
+                         "synthetic client shards on first dispatch")
     args = ap.parse_args()
 
     spec = (ScenarioSpec.load(args.spec) if args.spec

@@ -1,0 +1,25 @@
+"""Vectorized client-population subsystem (struct-of-arrays client state).
+
+``repro.pop`` holds ALL per-client simulation state — eligibility, speed
+tiers, arrival-process streams, auction bids, cost-model latency sampling
+and (optionally) lazily-materialized data partitions — as flat NumPy
+arrays instead of per-client Python objects, so scenarios scale to
+100k-1M synthetic clients with per-round cost O(cohort) + O(N) vectorized.
+
+The built-in ``vectorized`` population is a compatibility shim: it owns
+the exact same RNG streams the engines seed on the legacy dict path
+(speeds ``seed+1``, arrivals ``seed+2``, cost model ``seed+3``) and draws
+them in the same client-id order, so enabling it is bit-exact with the
+legacy path at any N (enforced by ``tests/test_population.py``).
+"""
+
+from repro.pop.data import LazyFedTask  # noqa: F401
+from repro.pop.population import (ClientPopulation,  # noqa: F401
+                                  VectorizedPopulation, get_population)
+
+__all__ = [
+    "ClientPopulation",
+    "LazyFedTask",
+    "VectorizedPopulation",
+    "get_population",
+]

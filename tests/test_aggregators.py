@@ -180,7 +180,7 @@ def test_ops_fused_aggregate_matches_oracle():
 @pytest.mark.parametrize("mode", ["sync", "async"])
 @pytest.mark.parametrize("name,options", [
     ("fedavgm", {}), ("fedadam", {"lr": 0.5}), ("fedmedian", {}),
-    ("trimmed_mean", {"trim": 0.2}),
+    ("trimmed_mean", {"trim": 0.2}), ("qfedavg", {"q": 1.0}),
 ])
 def test_aggregators_run_end_to_end(mode, name, options):
     """Every built-in drives both runtimes through run_scenario to
@@ -267,6 +267,48 @@ def test_trimmed_mean_trim_zero_is_unweighted_mean():
         {"p": jnp.asarray(x)}, np.ones(6, np.float32), None)
     np.testing.assert_allclose(np.asarray(upd["p"]), x.mean(axis=0),
                                rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------- qfedavg fairness exponent
+
+def test_qfedavg_q_zero_is_bit_exact_fedavg():
+    """q=0 degenerates to plain fedavg EXACTLY (same kernel call, no
+    norm/scale detour), so the fairness knob's off-position is free."""
+    rng = np.random.default_rng(7)
+    stacked = rand_cohort(rng)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, 6), jnp.float32)
+    uq, _ = get_aggregator("qfedavg", {"q": 0.0}).aggregate(
+        stacked, w, None, normalizer=w.sum())
+    uf, _ = get_aggregator("fedavg").aggregate(
+        stacked, w, None, normalizer=w.sum())
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), uq, uf)
+
+
+def test_qfedavg_upweights_high_norm_clients():
+    """q>0 tilts the fold toward clients with larger delta norms (the
+    optimality-gap surrogate): the aggregate moves closer to the
+    straggling client's delta than plain fedavg does, more so as q
+    grows."""
+    K, N = 4, 32
+    stacked = {"p": jnp.asarray(
+        np.concatenate([np.full((K - 1, N), 0.1, np.float32),
+                        np.full((1, N), 1.0, np.float32)]))}
+    w = jnp.ones(K, jnp.float32)
+
+    def pull(q):
+        upd, _ = get_aggregator("qfedavg", {"q": q}).aggregate(
+            stacked, w, None, normalizer=w.sum())
+        return float(np.asarray(upd["p"]).mean())
+
+    base, q1, q2 = pull(0.0), pull(1.0), pull(2.0)
+    assert base == pytest.approx((0.1 * 3 + 1.0) / 4, rel=1e-5)
+    assert base < q1 < q2 < 1.0
+
+
+def test_qfedavg_rejects_negative_q():
+    with pytest.raises(ValueError, match="q must be >= 0"):
+        get_aggregator("qfedavg", {"q": -1.0})
 
 
 # -------------------------------------------------- dtype bugfix (ops)

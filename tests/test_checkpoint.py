@@ -99,3 +99,38 @@ def test_mmfl_trainer_resume_equivalence(tmp_path):
     _, back, _ = m.restore()
     np.testing.assert_allclose(np.asarray(back["synth-mnist"]["acc"]),
                                h.acc[-1])
+
+
+def test_runtime_checkpoint_keep_gc(tmp_path):
+    """Regression for the spec-level retention knob: an async run with
+    ``checkpoint_keep=1`` leaves exactly ONE complete step directory on
+    disk (the newest), and a resume from it still replays the tail to an
+    uninterrupted-identical trace."""
+    from repro.api import (ClientPopulationSpec, RuntimeSpec, ScenarioSpec,
+                           TaskSpec, run_scenario)
+    from tests.test_async_resume import assert_async_equal
+
+    def spec(keep, ckpt_dir=None, resume=False):
+        return ScenarioSpec(
+            name="keep-gc",
+            tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]}),
+                   TaskSpec("synth-fmnist", options={"n_range": [40, 60]})],
+            clients=ClientPopulationSpec(n_clients=10,
+                                         speed_profile="bimodal"),
+            runtime=RuntimeSpec(mode="async", tau=2, total_arrivals=36,
+                                buffer_size=3, checkpoint_dir=ckpt_dir,
+                                checkpoint_every=2, checkpoint_keep=keep,
+                                resume=resume))
+
+    d = str(tmp_path / "keep1")
+    full = run_scenario(spec(1))
+    run_scenario(spec(1, ckpt_dir=d))
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) == 1                      # keep=1 GC'd the rest
+    assert int(open(f"{d}/LATEST").read()) == int(steps[0][5:])
+    resumed = run_scenario(spec(1, ckpt_dir=d, resume=True))
+    assert_async_equal(full, resumed)
+    # the default (keep=3) retains three complete steps of the same run
+    d3 = str(tmp_path / "keep3")
+    run_scenario(spec(3, ckpt_dir=d3))
+    assert len([x for x in os.listdir(d3) if x.startswith("step_")]) == 3

@@ -1,0 +1,310 @@
+"""Vectorized ClientPopulation parity suite.
+
+The acceptance bar: enabling ``clients.population = "vectorized"`` NEVER
+perturbs a run — sync and async engines produce bit-identical loss/acc
+curves, allocation traces, event streams, and simulated clocks versus the
+legacy per-client dict path, with heterogeneous cost models, non-trivial
+arrival processes, and re-auctioning incentives active. Plus the batched
+primitives themselves: ``next_starts`` consumes each arrival process's RNG
+stream exactly as the scalar ``next_start`` loop would (LAW, per
+registered process), the vectorized bid matrix matches the auction path,
+population ``state_dict`` round-trips through real JSON, and population
+state rides the async mid-run checkpoints to an event-for-event exact
+resume at 10k clients with lazily-materialized shards.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (ARRIVAL_PROCESSES, AuctionSpec, ClientPopulationSpec,
+                       PolicySpec, RuntimeSpec, ScenarioSpec, TaskSpec,
+                       build_eligibility, run_scenario)
+from repro.api.policy import draw_bids
+from repro.pop import VectorizedPopulation, get_population
+from tests.test_async_resume import assert_async_equal
+
+
+def _spec(population=None, mode="sync", n_clients=10, **kw):
+    return ScenarioSpec(
+        name="pop-parity",
+        seed=3,
+        data_seed=5,
+        tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]}),
+               TaskSpec("synth-fmnist", options={"n_range": [40, 60]})],
+        clients=ClientPopulationSpec(
+            n_clients=n_clients,
+            participation=0.6,
+            speed_profile="bimodal",
+            arrival_process=kw.pop("arrival_process", "poisson"),
+            arrival_options=kw.pop("arrival_options", {"mean_idle": 0.5}),
+            population=population,
+            population_options=kw.pop("population_options", {})),
+        policy=kw.pop("policy", None),
+        auction=kw.pop("auction", None),
+        runtime=RuntimeSpec(mode=mode, rounds=3, tau=2,
+                            total_arrivals=kw.pop("total_arrivals", 30),
+                            buffer_size=3, **kw))
+
+
+def _assert_sync_equal(a, b):
+    np.testing.assert_array_equal(a.loss, b.loss)
+    np.testing.assert_array_equal(a.acc, b.acc)
+    np.testing.assert_array_equal(a.alloc, b.alloc)
+    np.testing.assert_array_equal(a.alloc_counts, b.alloc_counts)
+    np.testing.assert_array_equal(a.wall_clock_sim, b.wall_clock_sim)
+
+
+# ------------------------------------------------ engine parity (bit-exact)
+
+def test_sync_population_parity_with_cost_model():
+    """Sync rounds: identical losses, allocation trace, and simulated
+    clock with device_tiers latencies batched per cohort."""
+    legacy = run_scenario(_spec(None, cost_model="device_tiers"))
+    pop = run_scenario(_spec("vectorized", cost_model="device_tiers"))
+    _assert_sync_equal(legacy, pop)
+
+
+def test_async_population_parity_straggler_poisson():
+    """Async events: poisson arrivals + lognormal stragglers with dropout
+    — the full event stream (dispatch log, flush times, drop counts) is
+    bit-identical under batched dispatch."""
+    kw = dict(mode="async", cost_model="lognormal_straggler",
+              cost_model_options={"sigma": 0.5, "dropout_prob": 0.1})
+    legacy = run_scenario(_spec(None, **kw))
+    pop = run_scenario(_spec("vectorized", **kw))
+    assert_async_equal(legacy, pop)
+    assert legacy.cost_dropouts == pop.cost_dropouts
+    np.testing.assert_array_equal(legacy.wall_clock_sim, pop.wall_clock_sim)
+
+
+def test_async_population_parity_bursty_periodic_auction():
+    """The hard case: bursty availability windows plus a re-auctioning
+    incentive rewriting eligibility mid-run — the population's SoA
+    eligibility view and the coordinator stay in lockstep."""
+    kw = dict(mode="async",
+              arrival_process="bursty",
+              arrival_options={"period": 2.0, "duty": 0.6},
+              policy=PolicySpec("ucb_bandit", {"epsilon": 0.3}),
+              auction=AuctionSpec(mechanism="gmmfair", budget=8.0,
+                                  bid_seed=0,
+                                  incentive="periodic_auction",
+                                  incentive_options={"every": 3}))
+    legacy = run_scenario(_spec(None, **kw))
+    pop = run_scenario(_spec("vectorized", **kw))
+    assert_async_equal(legacy, pop)
+    assert legacy.auction["total_spent"] == pop.auction["total_spent"]
+
+
+def test_population_options_without_name_rejected():
+    with pytest.raises(ValueError, match="population_options"):
+        run_scenario(_spec(None, population_options={"lazy_data": True}))
+
+
+def test_unknown_population_rejected():
+    with pytest.raises(KeyError, match="nope"):
+        run_scenario(_spec("nope"))
+
+
+def test_bad_population_options_rejected():
+    with pytest.raises(ValueError, match="bad options for population"):
+        run_scenario(_spec("vectorized",
+                           population_options={"warp_factor": 9}))
+
+
+# -------------------------------------- batched primitive equivalence LAWS
+
+@pytest.mark.parametrize("name", sorted(ARRIVAL_PROCESSES.names()))
+def test_next_starts_matches_scalar_loop(name):
+    """LAW: for every registered arrival process, the batched
+    ``next_starts`` consumes the process's RNG stream exactly as the
+    equivalent sequence of scalar ``next_start`` calls (client-id order)
+    — including repeated batches interleaving with stream advancement."""
+    try:
+        a, b = ARRIVAL_PROCESSES.get(name)(), ARRIVAL_PROCESSES.get(name)()
+    except TypeError:       # test-registered entry without default ctor
+        pytest.skip(f"{name} has no default constructor")
+    K = 16
+    a.reset(K, np.random.default_rng(7))
+    b.reset(K, np.random.default_rng(7))
+    t = 0.0
+    for batch in (np.arange(K), np.array([3, 1, 9]), np.arange(5, 11)):
+        scalar = np.array([a.next_start(int(c), t) for c in batch])
+        vector = b.next_starts(batch, t)
+        np.testing.assert_array_equal(scalar, vector)
+        t += 1.7
+
+
+def test_population_bids_match_auction_path():
+    """The population's vectorized bid op is the SAME matrix the auction
+    path draws: eligibility from ``build_eligibility`` equals a dense
+    scatter of the mechanism's winners over ``population.bids``."""
+    from repro.api.registry import AUCTIONS
+
+    auction = AuctionSpec(mechanism="gmmfair", budget=6.0, bid_seed=11)
+    pop = get_population("vectorized", {}, n_clients=12, n_tasks=3, seed=0)
+    bids = pop.bids(auction)
+    np.testing.assert_array_equal(bids, draw_bids(auction, 12, 3))
+    elig, res = build_eligibility(auction, 12, 3)
+    mech = AUCTIONS.get(auction.mechanism)
+    ref = mech(bids, auction.budget,
+               rng=np.random.default_rng(auction.bid_seed + 1))
+    dense = np.zeros((12, 3), bool)
+    for s, ws in enumerate(ref.winners):
+        for c in ws:
+            dense[int(c), s] = True
+    np.testing.assert_array_equal(elig, dense)
+    assert res.winners == ref.winners
+
+
+def test_eligibility_view_shares_memory():
+    """The engine-held (K, S) view writes through to the (S, N) SoA, so
+    coordinator reads never diverge from population state."""
+    pop = get_population("vectorized", {}, n_clients=6, n_tasks=2, seed=0)
+    view = pop.set_eligibility(np.ones((6, 2), bool))
+    view[4, 1] = False
+    assert not pop.eligibility[4, 1]
+    assert not pop._elig[1, 4]
+
+
+def test_population_speeds_match_legacy_stream():
+    """Speed tiers come off the same ``seed + 1`` stream as the legacy
+    async engine construction."""
+    from repro.fed.async_engine import client_speeds
+
+    pop = get_population("vectorized", {}, n_clients=32, n_tasks=2, seed=9,
+                         speed_profile="bimodal", speed_spread=4.0)
+    ref = client_speeds("bimodal", 32, np.random.default_rng(10),
+                        spread=4.0, slow_fraction=0.5)
+    np.testing.assert_array_equal(pop.speeds, ref)
+
+
+def test_lazy_task_matches_eager_row_shapes():
+    """Lazy shards pad to the same (n_high, input_dim) row shape as the
+    eager partition, so cohort batch shapes (and jit caches) match."""
+    from repro.fed.data import make_synthetic_task
+    from repro.pop import LazyFedTask
+
+    eager = make_synthetic_task(7, "synth-mnist", 6, n_range=(40, 60))
+    lazy = LazyFedTask(7, "synth-mnist", 6, n_range=(40, 60))
+    assert lazy.train_x.shape == eager.train_x.shape
+    assert (lazy._sizes >= 40).all() and (lazy._sizes <= 60).all()
+    np.testing.assert_allclose(lazy.p_k.sum(), 1.0, rtol=1e-6)
+    x, y, w = lazy.gather(np.array([2, 4]))
+    assert x.shape == (2,) + eager.train_x.shape[1:]
+    assert y.shape == (2,) + eager.train_y.shape[1:]
+    assert w.shape == (2,) + eager.train_w.shape[1:]
+    # padded rows carry zero weight beyond the client's true shard size
+    assert (w[0, int(lazy._sizes[2]):] == 0).all()
+    assert (w[0, : int(lazy._sizes[2])] == 1).all()
+
+
+# ------------------------------------------- checkpoints: ride-along state
+
+def test_population_async_resume_10k_clients_lazy(tmp_path):
+    """Acceptance: a 10k-client async run with lazily-materialized shards
+    checkpoints mid-run and resumes event-for-event identical to the
+    uninterrupted run — population config stamp validated, eligibility
+    and stream state restored through the engine keys."""
+    def spec(ckpt_dir=None, resume=False):
+        return ScenarioSpec(
+            name="pop-10k",
+            seed=1,
+            tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]})],
+            clients=ClientPopulationSpec(
+                n_clients=10_000,
+                speed_profile="bimodal",
+                population="vectorized",
+                population_options={"lazy_data": True}),
+            runtime=RuntimeSpec(mode="async", tau=1, total_arrivals=24,
+                                buffer_size=4,
+                                checkpoint_dir=ckpt_dir,
+                                checkpoint_every=4, resume=resume))
+
+    d = str(tmp_path / "ck")
+    full = run_scenario(spec())
+    run_scenario(spec(ckpt_dir=d))
+    latest = int(open(f"{d}/LATEST").read())
+    assert 0 < latest < len(full.time)        # strictly mid-run
+    resumed = run_scenario(spec(ckpt_dir=d, resume=True))
+    assert_async_equal(full, resumed)
+
+
+def test_population_config_mismatch_on_resume_raises(tmp_path):
+    """A checkpoint stamped with different population options must be
+    refused, not silently resumed under a different client universe."""
+    def spec(options, resume=False):
+        return _spec("vectorized", mode="async",
+                     population_options=options,
+                     checkpoint_dir=str(tmp_path / "ck"),
+                     checkpoint_every=2, resume=resume)
+
+    run_scenario(spec({"cache_rows": 64}))
+    with pytest.raises(ValueError, match="population options"):
+        run_scenario(spec({"cache_rows": 128}, resume=True))
+
+
+# --------------------------------------- hypothesis state round-trip law
+# (guarded per-test, NOT importorskip: that would skip the whole module,
+# engine parity included, on containers without hypothesis)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ImportError:         # pragma: no cover - exercised in bare envs
+    given = None
+
+if given is None:           # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_population_state_roundtrip_property_laws():
+        pass
+
+_SETTINGS = dict(max_examples=20, deadline=None,
+                 suppress_health_check=(
+                     [HealthCheck.too_slow] if given else []))
+
+
+if given is not None:
+    @given(data=st.data())
+    @settings(**_SETTINGS)
+    def test_population_state_dict_json_roundtrips(data):
+        """LAW: population state (config stamp, packed eligibility,
+        arrival + cost-model streams) survives state_dict -> json.dumps
+        -> json.loads -> load_state into a fresh instance, which then
+        samples identically."""
+        K = data.draw(st.integers(1, 40))
+        S = data.draw(st.integers(1, 4))
+        seed = data.draw(st.integers(0, 9))
+        proc = data.draw(st.sampled_from(["always_on", "bursty", "poisson"]))
+        pop = get_population("vectorized", {},
+                             n_clients=K, n_tasks=S, seed=seed,
+                             arrival_process=proc,
+                             cost_model="lognormal_straggler",
+                             cost_model_options={"sigma": 0.4})
+        pop.cost_model.reset(K, S, np.random.default_rng(seed + 3))
+        elig = data.draw(st.lists(st.booleans(), min_size=K * S,
+                                  max_size=K * S))
+        pop.set_eligibility(np.asarray(elig, bool).reshape(K, S))
+        # advance the streams a bit before snapshotting
+        n_pre = data.draw(st.integers(0, 5))
+        ids = np.arange(min(K, 3))
+        for i in range(n_pre):
+            pop.next_arrivals(ids, float(i))
+            pop.sample_latencies(ids, 0, 1.0)
+
+        state = json.loads(json.dumps(pop.state_dict()))
+        clone = get_population("vectorized", {},
+                               n_clients=K, n_tasks=S, seed=seed + 1,
+                               arrival_process=proc,
+                               cost_model="lognormal_straggler",
+                               cost_model_options={"sigma": 0.4})
+        clone.cost_model.reset(K, S, np.random.default_rng(0))
+        clone.load_state(state)
+        np.testing.assert_array_equal(pop.eligibility, clone.eligibility)
+        all_ids = np.arange(K)
+        np.testing.assert_array_equal(pop.next_arrivals(all_ids, 9.0),
+                                      clone.next_arrivals(all_ids, 9.0))
+        a = pop.sample_latencies(all_ids, 0, 1.0)
+        b = clone.sample_latencies(all_ids, 0, 1.0)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
