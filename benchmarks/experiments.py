@@ -755,3 +755,58 @@ def exp15_population_scaling(fast=True, json_path="BENCH_population.json"):
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
     return out
+
+
+def exp16_static_analysis(fast=True, json_path="BENCH_analysis.json"):
+    """Linter cost gate: time the full `repro.analysis` scan of src/repro
+    the way exp10 times backends, so the static-analysis job's cost is
+    tracked like every other subsystem. Reports whole-scan wall time and
+    files/s (parse + all rules), a per-rule breakdown in ms (shared parse
+    amortized out, so a rule that goes quadratic shows up by name), and
+    the findings count — which doubles as a canary: the committed
+    baseline is empty, so any nonzero count here means the tree regressed
+    an invariant. Writes BENCH_analysis.json for the CI artifact trail."""
+    from pathlib import Path
+
+    from repro.analysis import (RULES, load_project, run_analysis,
+                                run_rules, select_rules)
+
+    root = Path(__file__).resolve().parents[1]
+    target = root / "src" / "repro"
+    iters = 2 if fast else 5
+
+    run_analysis([target])                 # warm-up (fs cache, imports)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        findings = run_analysis([target])
+    scan_s = (time.perf_counter() - t0) / iters
+
+    project = load_project([target])       # shared parse for the breakdown
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        load_project([target])
+    parse_s = (time.perf_counter() - t0) / iters
+
+    per_rule_ms = {}
+    for code in sorted(RULES):
+        rules = select_rules(select=[code])
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            run_rules(project, rules)
+        per_rule_ms[code] = (time.perf_counter() - t0) / iters * 1e3
+
+    n_files = len(project.modules)
+    out = {
+        "scan_s": scan_s,
+        "parse_s": parse_s,
+        "files": n_files,
+        "files_per_s": n_files / max(scan_s, 1e-12),
+        "findings": len(findings),
+        "per_rule_ms": per_rule_ms,
+        "config": {"iters": iters, "target": "src/repro",
+                   "rules": sorted(RULES)},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out

@@ -65,6 +65,7 @@ def experiment_specs():
         ("exp13_aggregators", E.exp13_aggregators),
         ("exp14_cost_models", E.exp14_cost_models),
         ("exp15_population_scaling", E.exp15_population_scaling),
+        ("exp16_static_analysis", E.exp16_static_analysis),
     ]
 
 

@@ -1,0 +1,35 @@
+"""``repro.analysis`` — AST-based invariant linter for this repo.
+
+Stdlib-only (no jax/numpy): the linter must start in milliseconds and
+run even where the training stack can't import. Rules self-register via
+``@register_rule`` (the repo's registry idiom applied to its own
+tooling); ``run_analysis`` is the one-call API shared by the CLI, the
+tests, and the exp16 benchmark.
+"""
+
+from repro.analysis.framework import (
+    Finding,
+    Module,
+    Project,
+    RULES,
+    Rule,
+    load_project,
+    register_rule,
+    run_analysis,
+    run_rules,
+    select_rules,
+)
+from repro.analysis import rules as _rules  # noqa: F401  populate RULES eagerly
+
+__all__ = [
+    "Finding",
+    "Module",
+    "Project",
+    "RULES",
+    "Rule",
+    "load_project",
+    "register_rule",
+    "run_analysis",
+    "run_rules",
+    "select_rules",
+]

@@ -21,7 +21,7 @@ from typing import Any, Callable, Dict, List
 class Registry:
     """A named string -> object mapping with decorator registration."""
 
-    def __init__(self, kind: str):
+    def __init__(self, kind: str) -> None:
         self.kind = kind
         self._items: Dict[str, Any] = {}
 

@@ -1,0 +1,18 @@
+"""CKPT01 fixture: state_dict writes keys load_state never reads."""
+
+
+class DriftingState:
+    def __init__(self):
+        self.round = 0
+        self.history = []
+        self.rng_state = None
+
+    def state_dict(self):
+        state = {"round": self.round, "history": list(self.history)}
+        state["rng_state"] = self.rng_state  # written...
+        return state
+
+    def load_state(self, state):
+        self.round = state["round"]
+        self.history = list(state.get("history", []))
+        # ...but "rng_state" is never read back: resume drops it

@@ -1,0 +1,43 @@
+"""CKPT01 fixture: symmetric schemas, including the sanctioned idioms —
+legacy read-only keys, helper-method reads, and super() delegation."""
+
+
+class SymmetricState:
+    def state_dict(self):
+        out = {"round": self.round}
+        out.update({"history": list(self.history)})
+        return out
+
+    def load_state(self, state):
+        self._validate(state)
+        if "legacy_losses" in state:  # read-without-write: allowed
+            self.history = state["legacy_losses"]
+        else:
+            self.history = state["history"]
+
+    def _validate(self, state):
+        if "round" not in state:
+            raise ValueError("missing round")
+        self.round = state["round"]
+
+
+class DelegatingState(SymmetricState):
+    def state_dict(self):
+        state = super().state_dict()
+        state["extra"] = self.extra
+        return state
+
+    def load_state(self, state):
+        super().load_state(state)
+        self.extra = state.get("extra", 0)
+
+
+class DynamicState:
+    """Dynamically-built payloads are skipped, not guessed at."""
+
+    def state_dict(self):
+        return {k: getattr(self, k) for k in self._FIELDS}
+
+    def load_state(self, state):
+        for k, v in state.items():
+            setattr(self, k, v)

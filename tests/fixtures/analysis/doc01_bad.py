@@ -1,0 +1,7 @@
+"""DOC01 fixture: a registered key missing from the registry doc."""
+from repro.api.registry import register_allocator
+
+
+@register_allocator("fixture_undocumented")
+def undocumented_allocator(ctx):
+    return {}

@@ -1,0 +1,11 @@
+"""DOC01 fixture: the registered key appears in the registry doc
+(see registry_doc.md); dynamically-keyed registrations are skipped."""
+from repro.api.registry import register_allocator, ALLOCATORS
+
+for _k in ("a", "b"):
+    ALLOCATORS.add(_k, object())  # dynamic key: out of static reach
+
+
+@register_allocator("fixture_documented")
+def documented_allocator(ctx):
+    return {}

@@ -1,0 +1,39 @@
+"""JIT01 fixture: host effects inside traced functions, across every
+marking form (decorator, partial-decorator, call, lru_cache'd factory,
+lambda)."""
+import functools
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def decorated(x):
+    print("tracing", x)  # trace-time only
+    return x * 2
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def partial_decorated(x, mode="a"):
+    t = time.time()  # baked in at trace time
+    return x + t
+
+
+def host_sync(x):
+    return x.sum().item()  # forces host sync
+
+
+host_sync_jit = jax.jit(host_sync)
+
+
+@functools.lru_cache(maxsize=None)
+def make_step():
+    def step(x):
+        noise = np.random.rand()  # host RNG baked in at trace time
+        return x + noise
+
+    return jax.jit(step)
+
+
+mapped = jax.vmap(lambda x: print(x) or x)

@@ -1,0 +1,27 @@
+"""JIT01 fixture: pure traced functions; host effects *outside* the
+traced region are fine, as is jax.debug.print inside it."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pure_step(x):
+    jax.debug.print("x = {}", x)  # runtime-safe debug printing
+    return jnp.tanh(x)
+
+
+def timed_call(x):
+    t0 = time.time()  # outside any trace
+    y = pure_step(x)
+    print("took", time.time() - t0)
+    return y
+
+
+def shadowed_print(x):
+    # a locally-bound `print` is not the builtin
+    def print(*a):  # noqa: A001
+        return None
+
+    return jax.jit(lambda v: v + 1)(x), print

@@ -1,0 +1,26 @@
+"""JIT02 fixture: traced functions mutating closed-over/global state."""
+import jax
+
+_CACHE = {}
+
+
+@jax.jit
+def memoized(x):
+    _CACHE["last"] = x  # trace-time-only write to module state
+    return x
+
+
+def make_counter():
+    count = [0]
+
+    def step(x):
+        count[0] += 1  # closure mutation: frozen after trace
+        return x + count[0]
+
+    return jax.jit(step)
+
+
+@jax.jit
+def uses_global(x):
+    global _CACHE  # any global statement in a traced fn
+    return x

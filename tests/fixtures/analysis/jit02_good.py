@@ -1,0 +1,20 @@
+"""JIT02 fixture: the sanctioned mutation patterns — Pallas output refs
+(parameters) and purely local accumulators."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(s_ref, w_ref, o_ref):
+    acc = s_ref[...] * w_ref[...]  # local binding: fine
+    o_ref[...] = acc  # parameter ref: the sanctioned output write
+
+
+def run(s, w, out_shape):
+    return pl.pallas_call(_kernel, out_shape=out_shape)(s, w)
+
+
+@jax.jit
+def local_dict(x):
+    scratch = {}
+    scratch["y"] = x * 2  # locally-bound container: fine
+    return scratch["y"]

@@ -1,0 +1,21 @@
+"""RNG01 fixture: module-global and unseeded RNG."""
+import random
+
+import numpy as np
+from numpy.random import default_rng
+
+
+def draw_speeds(n):
+    return np.random.rand(n)  # module-global stream
+
+
+def make_rng():
+    return np.random.default_rng()  # unseeded
+
+
+def make_rng_none():
+    return default_rng(None)  # unseeded (explicit None)
+
+
+def stdlib_draw():
+    return random.random()  # stdlib module-global stream

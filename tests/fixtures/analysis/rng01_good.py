@@ -1,0 +1,25 @@
+"""RNG01 fixture: properly seeded per-axis streams."""
+import random
+
+import numpy as np
+from numpy.random import default_rng
+
+
+def make_streams(seed):
+    speeds = np.random.default_rng(seed + 1)
+    arrivals = default_rng(seed + 2)
+    return speeds, arrivals
+
+
+def generator_passthrough(rng: np.random.Generator):
+    return rng.normal()  # method on an injected Generator: fine
+
+
+def local_shadow():
+    # a local called "random" must not be mistaken for the module
+    rng = {"random": lambda: 0.5}
+    return rng["random"]()
+
+
+def seeded_stdlib(seed):
+    return random.Random(seed)  # instance construction is allowed

@@ -1,0 +1,9 @@
+"""RNG02 fixture: two streams derived from the same seed offset in one
+scope (commuted operand order must still collide)."""
+import numpy as np
+
+
+def init_streams(cfg):
+    speeds = np.random.default_rng(cfg.seed + 2)
+    arrivals = np.random.default_rng(2 + cfg.seed)  # collides with speeds
+    return speeds, arrivals

@@ -1,0 +1,16 @@
+"""RNG02 fixture: distinct offsets per stream; re-deriving the same
+stream in a *different* scope (the resume idiom) is allowed."""
+import numpy as np
+
+
+def init_streams(cfg):
+    speeds = np.random.default_rng(cfg.seed + 1)
+    arrivals = np.random.default_rng(cfg.seed + 2)
+    cost = np.random.default_rng(cfg.seed + 3)
+    return speeds, arrivals, cost
+
+
+def load_state(cfg, state):
+    # same offset as init_streams — correct resume re-derivation,
+    # different function scope, no finding
+    return np.random.default_rng(cfg.seed + 3)

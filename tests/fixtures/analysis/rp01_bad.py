@@ -1,0 +1,44 @@
+"""RP01 fixture: registered classes that break the axis protocol."""
+from repro.api.registry import register_cost_model, register_buffer_controller
+
+
+@register_cost_model("fixture_missing_method")
+class MissingSampleLatency:
+    """Missing sample_latency entirely, and no state pair."""
+
+    def reset(self, n_clients, n_tasks, rng, task_sizes=None):
+        self.n = n_clients
+
+
+@register_cost_model("fixture_bad_arity")
+class BadArity:
+    """reset cannot accept (n_clients, n_tasks, rng)."""
+
+    def reset(self, n_clients):
+        self.n = n_clients
+
+    def sample_latency(self, client, task, base_duration, time=0.0, version=0):
+        return 1.0
+
+    def state_dict(self):
+        return {}
+
+    def load_state(self, state):
+        pass
+
+
+@register_buffer_controller("fixture_stub")
+class StubController:
+    """sizes left as the abstract stub; load_state missing its pair."""
+
+    def reset(self, n_tasks, initial_size):
+        self.k = initial_size
+
+    def observe(self, obs):
+        pass
+
+    def sizes(self):
+        raise NotImplementedError
+
+    def state_dict(self):
+        return {"k": self.k}

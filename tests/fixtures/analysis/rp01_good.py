@@ -1,0 +1,20 @@
+"""RP01 fixture: a fully conformant registered cost model, including a
+base class supplying part of the protocol (inheritance resolution)."""
+from repro.api.registry import register_cost_model
+
+
+class _Base:
+    def state_dict(self):
+        return {"n": self.n}
+
+    def load_state(self, state):
+        self.n = state["n"]
+
+
+@register_cost_model("fixture_ok")
+class ConformantModel(_Base):
+    def reset(self, n_clients, n_tasks, rng, task_sizes=None):
+        self.n = n_clients
+
+    def sample_latency(self, client, task, base_duration, time=0.0, version=0):
+        return base_duration

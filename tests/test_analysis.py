@@ -1,0 +1,246 @@
+"""The invariant linter (``repro.analysis``): rule registry laws,
+per-rule positive/negative fixtures, the self-scan that asserts the repo
+itself is clean, baseline/noqa/CLI behavior, catalog drift, and the
+RNG-audit regression (async runs stay bit-identical — the property
+RNG01/RNG02 exist to protect).
+
+The analysis package is stdlib-only, so everything here except the
+bit-identity test runs without jax.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, Finding, Rule, run_analysis
+from repro.analysis.__main__ import dump_markdown, main
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+FIXTURE_DOC = FIXTURES / "registry_doc.md"
+
+ALL_CODES = ("CKPT01", "DOC01", "JIT01", "JIT02", "RNG01", "RNG02", "RP01")
+
+
+def scan(stem, codes):
+    return run_analysis([FIXTURES / f"{stem}.py"], select=codes,
+                        registry_doc=FIXTURE_DOC)
+
+
+# ------------------------------------------------------------ registry laws
+
+def test_rule_registry_complete():
+    assert tuple(sorted(RULES)) == ALL_CODES
+
+
+def test_rule_registry_laws():
+    """Every rule: code matches its key, kebab name, one-line summary,
+    full docstring (the docs/ANALYSIS.md catalog source), check impl."""
+    for code, cls in RULES.items():
+        assert cls.code == code and code.isupper()
+        assert cls.name and cls.name == cls.name.lower() and " " not in cls.name
+        assert cls.summary and "\n" not in cls.summary
+        assert cls.__doc__ and len(cls.__doc__.strip()) > 80
+        assert cls.check is not Rule.check
+
+
+def test_duplicate_rule_code_rejected():
+    from repro.analysis import register_rule
+
+    class Dup(Rule):
+        code = "RNG01"
+        name = "dup"
+        summary = "dup"
+
+    with pytest.raises(ValueError, match="duplicate"):
+        register_rule(Dup)
+
+
+def test_finding_fingerprint_ignores_line_numbers():
+    a = Finding("RNG01", "msg", "p.py", line=3, symbol="f")
+    b = Finding("RNG01", "msg", "p.py", line=99, symbol="f")
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != Finding("RNG01", "other", "p.py", 3, symbol="f").fingerprint
+
+
+# ------------------------------------------------- per-rule fixture checks
+
+@pytest.mark.parametrize("stem,code,min_bad", [
+    ("rp01", "RP01", 6),
+    ("rng01", "RNG01", 4),
+    ("rng02", "RNG02", 1),
+    ("jit01", "JIT01", 5),
+    ("jit02", "JIT02", 3),
+    ("ckpt01", "CKPT01", 1),
+    ("doc01", "DOC01", 1),
+])
+def test_rule_fixtures(stem, code, min_bad):
+    bad = scan(f"{stem}_bad", [code])
+    assert len(bad) >= min_bad
+    assert all(f.code == code for f in bad)
+    assert scan(f"{stem}_good", [code]) == []
+
+
+def test_rp01_finding_kinds():
+    msgs = "\n".join(f.message for f in scan("rp01_bad", ["RP01"]))
+    assert "missing required method sample_latency" in msgs
+    assert "reset must accept 3 positional argument(s)" in msgs
+    assert "abstract NotImplementedError stub" in msgs
+    assert "missing required method load_state" in msgs  # unpaired state_dict
+
+
+def test_rng01_finding_kinds():
+    msgs = "\n".join(f.message for f in scan("rng01_bad", ["RNG01"]))
+    assert "module-global numpy.random.rand()" in msgs
+    assert msgs.count("unseeded default_rng()") == 2  # bare and explicit-None
+    assert "module-global random.random()" in msgs
+
+
+def test_rng02_commuted_offsets_collide():
+    (f,) = scan("rng02_bad", ["RNG02"])
+    assert "seed-offset collision" in f.message
+    assert "line 7" in f.message
+
+
+def test_jit01_catches_every_marking_form():
+    syms = {f.symbol for f in scan("jit01_bad", ["JIT01"])}
+    # decorator, partial-decorator, call form, lru_cache'd factory, lambda
+    assert {"decorated", "partial_decorated", "host_sync",
+            "make_step.step"} <= syms
+
+
+def test_jit02_closure_and_global_mutation():
+    msgs = "\n".join(f.message for f in scan("jit02_bad", ["JIT02"]))
+    assert "_CACHE" in msgs and "count" in msgs and "global statement" in msgs
+
+
+def test_ckpt01_names_the_dropped_key():
+    (f,) = scan("ckpt01_bad", ["CKPT01"])
+    assert "'rng_state'" in f.message and "never reads" in f.message
+
+
+def test_doc01_undocumented_key():
+    (f,) = scan("doc01_bad", ["DOC01"])
+    assert "'fixture_undocumented'" in f.message
+
+
+# ---------------------------------------------------------------- self-scan
+
+def test_self_scan_src_repro_is_clean():
+    """The acceptance gate: the linter finds nothing in src/repro (and
+    the committed baseline stays empty — fix, don't grandfather)."""
+    assert run_analysis([REPO / "src" / "repro"]) == []
+    baseline = json.loads((REPO / "analysis_baseline.json").read_text())
+    assert baseline == {"version": 1, "findings": []}
+
+
+def test_rng_audit_clean():
+    """Satellite audit: every default_rng in src/repro is seeded, every
+    scope keeps distinct offsets (the streams exp9 bit-identity needs)."""
+    assert run_analysis([REPO / "src" / "repro"],
+                        select=["RNG01", "RNG02"]) == []
+
+
+# ----------------------------------------------------- noqa / baseline / CLI
+
+VIOLATION = "import numpy as np\n\ndef f(n):\n    return np.random.rand(n)\n"
+
+
+def test_noqa_suppresses_matching_code_only(tmp_path):
+    ok = tmp_path / "ok.py"
+    ok.write_text(VIOLATION.replace("rand(n)", "rand(n)  # noqa: RNG01"))
+    assert run_analysis([ok]) == []
+    wrong = tmp_path / "wrong.py"
+    wrong.write_text(VIOLATION.replace("rand(n)", "rand(n)  # noqa: RP01"))
+    assert [f.code for f in run_analysis([wrong])] == ["RNG01"]
+    blanket = tmp_path / "blanket.py"
+    blanket.write_text(VIOLATION.replace("rand(n)", "rand(n)  # noqa"))
+    assert run_analysis([blanket]) == []
+
+
+def test_cli_baseline_cycle(tmp_path, capsys):
+    src = tmp_path / "mod.py"
+    src.write_text(VIOLATION)
+    assert main([str(src)]) == 1  # new finding fails the scan
+    base = tmp_path / "base.json"
+    assert main([str(src), "--write-baseline", str(base)]) == 0
+    capsys.readouterr()
+    assert main([str(src), "--baseline", str(base)]) == 0  # grandfathered
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out and "1 baselined" in out
+    # a NEW violation still fails against the old baseline
+    src.write_text(VIOLATION + "\ndef g():\n    return np.random.randn()\n")
+    assert main([str(src), "--baseline", str(base)]) == 1
+
+
+def test_cli_json_format(tmp_path, capsys):
+    src = tmp_path / "mod.py"
+    src.write_text(VIOLATION)
+    assert main([str(src), "--format", "json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["files_scanned"] == 1 and payload["baselined"] == 0
+    (f,) = payload["findings"]
+    assert f["code"] == "RNG01" and f["fingerprint"].startswith("RNG01:")
+
+
+def test_cli_select_ignore(tmp_path, capsys):
+    src = tmp_path / "mod.py"
+    src.write_text(VIOLATION)
+    assert main([str(src), "--select", "RP01"]) == 0
+    assert main([str(src), "--ignore", "RNG01"]) == 0
+    assert main([str(src), "--select", "NOPE"]) == 2
+    assert main(["--list-rules"]) == 0
+    assert len(capsys.readouterr().out.splitlines()) >= len(RULES)
+
+
+def test_cli_syntax_error_is_usage_error(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def broken(:\n")
+    assert main([str(bad)]) == 2
+    assert "cannot parse" in capsys.readouterr().err
+
+
+# ------------------------------------------------------------- docs catalog
+
+def test_analysis_catalog_in_sync():
+    """docs/ANALYSIS.md is generated from rule docstrings; CI diffs it
+    exactly like docs/REGISTRY.md."""
+    assert (REPO / "docs" / "ANALYSIS.md").read_text() == dump_markdown()
+
+
+def test_catalog_covers_every_rule():
+    md = dump_markdown()
+    for code, cls in RULES.items():
+        assert f"## {code} — {cls.name}" in md
+        assert cls.summary in md
+
+
+# ------------------------------------------- RNG-audit bit-identity anchor
+
+def test_async_run_bit_identical():
+    """The property the RNG rules guard: with every stream seeded and
+    offset-disjoint, two identical async runs (the exp9 configuration,
+    shrunk) produce bit-identical traces."""
+    import numpy as np
+
+    from repro.api import (ClientPopulationSpec, RuntimeSpec, ScenarioSpec,
+                           TaskSpec, run_scenario)
+
+    def spec():
+        return ScenarioSpec(
+            name="rng-audit",
+            seed=3,
+            tasks=[TaskSpec("synth-mnist", options={"n_range": [40, 60]}),
+                   TaskSpec("synth-fmnist", options={"n_range": [40, 60]})],
+            clients=ClientPopulationSpec(n_clients=8,
+                                         speed_profile="bimodal"),
+            runtime=RuntimeSpec(mode="async", tau=2, total_arrivals=24,
+                                buffer_size=3),
+        )
+
+    a, b = run_scenario(spec()), run_scenario(spec())
+    np.testing.assert_array_equal(a.loss, b.loss)
+    np.testing.assert_array_equal(a.acc, b.acc)
+    np.testing.assert_array_equal(a.time, b.time)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    assert a.assignments == b.assignments
