@@ -810,3 +810,85 @@ def exp16_static_analysis(fast=True, json_path="BENCH_analysis.json"):
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
     return out
+
+
+def exp17_checkpoints(fast=True, json_path="BENCH_checkpoints.json"):
+    """O(1)-checkpoint headline: per-save wall time and STEP.json bytes
+    as run length grows, append-only sidecar layout vs an emulation of
+    the retired embedded-history layout (whole-run curves inside the
+    coordinator payload — what CKPT02 now forbids). Drives the
+    CheckpointManager directly with engine-shaped flush records so the
+    figure isolates checkpoint cost from training cost. The sidecar
+    step stays flat while run length grows 10x (pinned by
+    tests/test_checkpoint_sidecar.py; this tracks the margin) and the
+    embedded step grows linearly — `embedded_step_growth` vs
+    `sidecar_step_growth` is the headline pair. Writes
+    BENCH_checkpoints.json for the CI artifact trail."""
+    import shutil
+    import tempfile
+    from pathlib import Path
+
+    from repro.checkpoint import CheckpointManager
+
+    lengths = [50, 500] if fast else [100, 1000, 10_000]
+    tasks = {"t": {"w": np.zeros(256, dtype=np.float32)}}
+
+    def record(i):
+        return {"kind": "flush", "time": float(i), "task": i % 2,
+                "loss": 1.0 / (1.0 + i), "staleness": i % 5,
+                "buffer": 3}
+
+    out = {}
+    for n in lengths:
+        # sidecar layout: stream records, save a BOUNDED payload
+        d = tempfile.mkdtemp(prefix="exp17_sidecar_")
+        try:
+            mgr = CheckpointManager(d, keep=1)
+            for i in range(n):
+                mgr.append_history(record(i))
+            t0 = time.perf_counter()
+            mgr.save(n, tasks, coordinator_state={"flushes": n},
+                     engine_kind="async")
+            sidecar_ms = (time.perf_counter() - t0) * 1e3
+            step = Path(d) / f"step_{n:08d}" / "STEP.json"
+            side = {
+                "save_ms": sidecar_ms,
+                "step_bytes": step.stat().st_size,
+                "sidecar_bytes": (Path(d) / "history.jsonl").stat().st_size,
+            }
+            mgr.close()
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+        # embedded emulation: same records, but riding in the payload
+        # (neutral key name so the legacy read path is not implied)
+        d = tempfile.mkdtemp(prefix="exp17_embedded_")
+        try:
+            mgr = CheckpointManager(d, keep=1)
+            rows = [record(i) for i in range(n)]
+            t0 = time.perf_counter()
+            mgr.save(n, tasks,
+                     coordinator_state={"flushes": n, "rows": rows},
+                     engine_kind="async")
+            embedded_ms = (time.perf_counter() - t0) * 1e3
+            step = Path(d) / f"step_{n:08d}" / "STEP.json"
+            emb = {"save_ms": embedded_ms,
+                   "step_bytes": step.stat().st_size}
+            mgr.close()
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+        out[f"events{n}"] = {"sidecar": side, "embedded": emb}
+
+    lo, hi = f"events{lengths[0]}", f"events{lengths[-1]}"
+    scale = lengths[-1] / lengths[0]
+    out["sidecar_step_growth"] = (
+        out[hi]["sidecar"]["step_bytes"] / out[lo]["sidecar"]["step_bytes"])
+    out["embedded_step_growth"] = (
+        out[hi]["embedded"]["step_bytes"] / out[lo]["embedded"]["step_bytes"])
+    out["config"] = {"lengths": lengths, "scale": scale,
+                     "leaf_floats": 256, "keep": 1}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+    return out

@@ -66,6 +66,7 @@ def experiment_specs():
         ("exp14_cost_models", E.exp14_cost_models),
         ("exp15_population_scaling", E.exp15_population_scaling),
         ("exp16_static_analysis", E.exp16_static_analysis),
+        ("exp17_checkpoints", E.exp17_checkpoints),
     ]
 
 

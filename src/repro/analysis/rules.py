@@ -921,6 +921,259 @@ class CheckpointSchemaRule(Rule):
                         sd)
 
 
+# --------------------------------------------------------------------- CKPT02
+
+
+# appends inside these methods reconstruct restored state (bounded by
+# what the payload held) rather than accumulate per produced event
+_RECONSTRUCTORS = ("__init__", "load_state", "reset", "_replay_history")
+
+
+def _attr_accumulators(cls: ast.ClassDef) -> Set[str]:
+    """``self.X`` attribute names that behave as unbounded event
+    accumulators: initialised to a list somewhere in the class AND grown
+    via ``.append``/``.extend`` from a non-reconstruction method — one
+    entry per round/flush, so size is proportional to run length."""
+    inits: Set[str] = set()
+    grown: Set[str] = set()
+    for node in ast.walk(cls):
+        targets: List[ast.expr] = []
+        value: Optional[ast.expr] = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        for t in targets:
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                    and isinstance(value, (ast.List, ast.ListComp))):
+                inits.add(t.attr)
+    for method in cls.body:
+        if not isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if method.name in _RECONSTRUCTORS:
+            continue
+        for node in ast.walk(method):
+            if isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Attribute):
+                f = node.func
+                if (f.attr in ("append", "extend")
+                        and isinstance(f.value, ast.Attribute)
+                        and isinstance(f.value.value, ast.Name)
+                        and f.value.value.id == "self"):
+                    grown.add(f.value.attr)
+    return inits & grown
+
+
+def _local_accumulators(fn: ast.AST) -> Set[str]:
+    """Local variable names used as unbounded accumulators inside one
+    function body (list-initialised + ``.append``/``.extend`` grown)."""
+    inits: Set[str] = set()
+    grown: Set[str] = set()
+    for node in _walk_in_scope(fn):
+        if isinstance(node, ast.Assign) and isinstance(
+                node.value, (ast.List, ast.ListComp)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    inits.add(t.id)
+                elif isinstance(t, ast.Tuple):
+                    # `a, b, c = [], [], []` multi-init
+                    for el in t.elts:
+                        if isinstance(el, ast.Name):
+                            inits.add(el.id)
+        elif isinstance(node, ast.Assign) and isinstance(
+                node.value, ast.Tuple):
+            for t in node.targets:
+                if isinstance(t, ast.Tuple) and len(t.elts) == len(
+                        node.value.elts):
+                    for el, v in zip(t.elts, node.value.elts):
+                        if isinstance(el, ast.Name) and isinstance(
+                                v, (ast.List, ast.ListComp)):
+                            inits.add(el.id)
+        elif isinstance(node, ast.Call) and isinstance(
+                node.func, ast.Attribute):
+            f = node.func
+            if f.attr in ("append", "extend") and isinstance(
+                    f.value, ast.Name):
+                grown.add(f.value.id)
+    return inits & grown
+
+
+def _proportional_refs(value: ast.AST, attrs: Set[str],
+                       local_names: Set[str]) -> Set[str]:
+    """Accumulator names the expression embeds WHOLESALE — a direct
+    reference, ``list()``/``np.asarray()``-style materialisation, a
+    slice, or a comprehension iterating one. Bounded derivations
+    (``len(x)``, scalar indexing ``x[-1]``) are allowed."""
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(value):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    out: Set[str] = set()
+    for node in ast.walk(value):
+        name: Optional[str] = None
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self" and node.attr in attrs):
+            name = f"self.{node.attr}"
+        elif isinstance(node, ast.Name) and node.id in local_names:
+            name = node.id
+        if name is None:
+            continue
+        p = parents.get(node)
+        if (isinstance(p, ast.Call) and isinstance(p.func, ast.Name)
+                and p.func.id == "len"):
+            continue                      # len(acc): bounded
+        if isinstance(p, ast.Subscript) and p.value is node:
+            sl = p.slice
+            if isinstance(sl, ast.UnaryOp):
+                sl = sl.operand
+            if isinstance(sl, ast.Constant):
+                continue                  # acc[-1]: scalar pick, bounded
+        if isinstance(p, ast.IfExp) and p.test is node:
+            continue                      # `acc[-1] if acc else None`
+        if isinstance(p, ast.Attribute) and p.attr in ("append", "extend"):
+            continue                      # growing it, not embedding it
+        out.add(name)
+    return out
+
+
+def _payload_values(fn: ast.AST,
+                    arg: ast.expr) -> Iterator[Tuple[str, ast.expr]]:
+    """(key, value) pairs of the dict expression ``arg`` — a literal, or
+    a name resolved to dict-literal assignments (plus ``var[k] = v``
+    additions) in the same scope."""
+    if isinstance(arg, ast.Dict):
+        for k, v in zip(arg.keys, arg.values):
+            s = _const_str(k) if k is not None else None
+            yield (s or "<dynamic>"), v
+        return
+    if not isinstance(arg, ast.Name):
+        return
+    for node in _walk_in_scope(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if (isinstance(t, ast.Name) and t.id == arg.id
+                    and isinstance(node.value, ast.Dict)):
+                for k, v in zip(node.value.keys, node.value.values):
+                    s = _const_str(k) if k is not None else None
+                    yield (s or "<dynamic>"), v
+            elif (isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == arg.id):
+                s = _const_str(t.slice)
+                yield (s or "<dynamic>"), node.value
+
+
+@register_rule
+class UnboundedPayloadRule(Rule):
+    """The O(1)-checkpoint contract (docs/CHECKPOINTS.md): the per-step
+    payload holds only BOUNDED control state — everything that grows
+    with run length streams through the ``history.jsonl`` sidecar via
+    ``append_history``, and ``save`` merely commits the byte offset.
+    Before the sidecar, engines embedded their whole-run curve lists in
+    every step, so checkpoint size and write time grew linearly with
+    run length and week-long runs spent their budget rewriting history.
+
+    This rule flags the regression statically: an unbounded accumulator
+    (a ``self`` attribute or local list that is list-initialised and
+    ``.append``/``.extend``-grown per event) embedded WHOLESALE — direct
+    reference, ``list()``-style materialisation, slice, or comprehension
+    over it — in a ``state_dict`` return or in the ``coordinator_state``
+    payload of a ``save(...)`` call. Bounded derivations (``len(acc)``,
+    scalar ``acc[-1]``) are allowed, as is reading legacy embedded
+    history on load. A literal ``"history"`` payload key is flagged
+    unconditionally: that is the legacy layout's write path, which is
+    compat-READ-only. Covered by ``tests/test_analysis.py::test_ckpt02_*``.
+    """
+
+    code = "CKPT02"
+    name = "unbounded-checkpoint-payload"
+    summary = ("run-length-proportional history embedded in a step "
+               "payload instead of the sidecar")
+
+    def _check_fn(self, m: Module, cls: Optional[ast.ClassDef],
+                  fn: ast.AST) -> Iterator[Finding]:
+        attrs = _attr_accumulators(cls) if cls is not None else set()
+        local_acc = _local_accumulators(fn)
+        for node in _walk_in_scope(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "save"):
+                continue
+            payload: Optional[ast.expr] = None
+            for kw in node.keywords:
+                if kw.arg == "coordinator_state":
+                    payload = kw.value
+            if payload is None and len(node.args) >= 3:
+                payload = node.args[2]
+            if payload is None:
+                continue
+            for key, v in _payload_values(fn, payload):
+                if key == "history":
+                    yield m.finding(
+                        self.code,
+                        f"save() payload writes the legacy 'history' "
+                        "key — embedded whole-run history is read-only "
+                        "compat; stream records through append_history "
+                        "so checkpoints stay O(1)",
+                        node)
+                    continue
+                for acc in sorted(_proportional_refs(v, attrs, local_acc)):
+                    yield m.finding(
+                        self.code,
+                        f"save() payload key {key!r} embeds the "
+                        f"unbounded accumulator {acc} (grown per "
+                        "event) — checkpoint size becomes O(run "
+                        "length); stream it through append_history",
+                        node)
+
+    def _check_state_dict(self, m: Module,
+                          cls: ast.ClassDef) -> Iterator[Finding]:
+        sd = next((n for n in cls.body
+                   if isinstance(n, ast.FunctionDef)
+                   and n.name == "state_dict"), None)
+        if sd is None or _is_abstract_stub(sd):
+            return
+        attrs = _attr_accumulators(cls)
+        if not attrs:
+            return
+        for node in _walk_in_scope(sd):
+            if not isinstance(node, (ast.Return, ast.Assign)):
+                continue
+            v = node.value
+            if v is None:
+                continue
+            for acc in sorted(_proportional_refs(v, attrs, set())):
+                yield m.finding(
+                    self.code,
+                    f"{cls.name}.state_dict embeds the unbounded "
+                    f"accumulator {acc} (grown per event) in the step "
+                    "payload — checkpoint size becomes O(run length); "
+                    "expose it as sidecar records (history_records) "
+                    "instead",
+                    sd)
+                return  # one finding per state_dict is enough
+
+    def check(self, project: Project) -> Iterator[Finding]:
+        for m in project.modules:
+            seen: Set[ast.AST] = set()
+            for node in ast.walk(m.tree):
+                if isinstance(node, ast.ClassDef):
+                    yield from self._check_state_dict(m, node)
+                    for sub in node.body:
+                        if isinstance(sub, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                            seen.add(sub)
+                            yield from self._check_fn(m, node, sub)
+            for node in ast.walk(m.tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and node not in seen:
+                    yield from self._check_fn(m, None, node)
+
+
 # ---------------------------------------------------------------------- DOC01
 
 _DOC_SECTION_RE = re.compile(r"^## (\w+) \(")

@@ -218,6 +218,10 @@ def _train_config(spec: ScenarioSpec) -> TrainConfig:
         cost_model_options=dict(rt.cost_model_options),
         population=pop.population,
         population_options=dict(pop.population_options),
+        checkpoint_dir=rt.checkpoint_dir,
+        checkpoint_every=rt.checkpoint_every,
+        checkpoint_keep=rt.checkpoint_keep,
+        resume=rt.resume,
     )
 
 
@@ -591,10 +595,11 @@ class ArchSyncEngine:
             ckpt = CheckpointManager(rt.checkpoint_dir,
                                      keep=rt.checkpoint_keep)
             # shared resume preamble (CheckpointManager.begin): resume
-            # gate, foreign-engine guard, stale-step clear
+            # gate, foreign-engine guard, sidecar truncation + replay,
+            # stale-step clear
             hit = ckpt.begin("sync", rt.resume)
             if hit is not None:
-                step, saved, coord_state = hit
+                step, saved, coord_state = hit.step, hit.tasks, hit.coordinator
                 import jax
                 import jax.numpy as jnp
 
@@ -622,23 +627,52 @@ class ArchSyncEngine:
                             self.coord.eligibility = self._set_eligibility(
                                 self.incentive.eligibility)
                     # pre-checkpoint curves, so the RunResult covers the
-                    # WHOLE run, not just the post-resume tail
-                    hist = coord_state.get("history", {})
-                    loss_hist = [list(x) for x in hist.get("loss", [])]
-                    count_hist = [list(x) for x in hist.get("counts", [])]
-                    alloc_hist = [np.asarray(x, np.int64)
-                                  for x in hist.get("alloc", [])]
-                    # pre-backend checkpoints carry no accuracy curve;
-                    # only restore when it covers the restored rounds
-                    acc_hist = [list(x) for x in hist.get("acc", [])]
+                    # WHOLE run, not just the post-resume tail: replayed
+                    # from the sidecar records begin() handed back, or —
+                    # legacy embedded-history checkpoint — read from the
+                    # payload itself (and backfilled into the sidecar so
+                    # the next save commits the full new-layout history)
+                    if hit.history is not None:
+                        for rec in hit.history:
+                            if rec.get("kind") != "round":
+                                continue
+                            loss_hist.append(list(rec["loss"]))
+                            count_hist.append(list(rec["counts"]))
+                            alloc_hist.append(
+                                np.asarray(rec["alloc"], np.int64))
+                            if "acc" in rec:
+                                acc_hist.append(list(rec["acc"]))
+                            if "wall_clock" in rec:
+                                clock_hist.append(float(rec["wall_clock"]))
+                    else:
+                        hist = coord_state.get("history", {})
+                        loss_hist = [list(x) for x in hist.get("loss", [])]
+                        count_hist = [list(x) for x in hist.get("counts", [])]
+                        alloc_hist = [np.asarray(x, np.int64)
+                                      for x in hist.get("alloc", [])]
+                        acc_hist = [list(x) for x in hist.get("acc", [])]
+                        clock_hist = [float(x)
+                                      for x in hist.get("wall_clock", [])]
+                    # pre-backend checkpoints carry no accuracy curve and
+                    # pre-cost-model ones no clock; only report each when
+                    # it covers the restored rounds
                     if len(acc_hist) != len(loss_hist):
                         acc_hist = []
-                    # pre-cost-model checkpoints carry no clock; only
-                    # restore when it covers the restored rounds
-                    clock_hist = [float(x)
-                                  for x in hist.get("wall_clock", [])]
                     if len(clock_hist) != len(loss_hist):
                         clock_hist = []
+                    if hit.history is None:
+                        for i in range(len(loss_hist)):
+                            rec = {
+                                "kind": "round",
+                                "loss": list(loss_hist[i]),
+                                "counts": list(count_hist[i]),
+                                "alloc": np.asarray(alloc_hist[i]).tolist(),
+                            }
+                            if acc_hist:
+                                rec["acc"] = list(acc_hist[i])
+                            if clock_hist:
+                                rec["wall_clock"] = float(clock_hist[i])
+                            ckpt.append_history(rec)
                     if "cost_model" in coord_state:
                         self.cost_model.load_state(
                             coord_state["cost_model"])
@@ -700,6 +734,17 @@ class ArchSyncEngine:
             acc_hist.append([self._acc_of(a) for a in self.names])
             clock += round_time
             clock_hist.append(clock)
+            if ckpt is not None:
+                # whole-run history streams into the append-only sidecar
+                # (buffered; the next save fsyncs + commits the offset)
+                ckpt.append_history({
+                    "kind": "round",
+                    "loss": list(loss_hist[-1]),
+                    "counts": list(count_hist[-1]),
+                    "alloc": row.tolist(),
+                    "acc": list(acc_hist[-1]),
+                    "wall_clock": float(clock),
+                })
             if verbose:
                 print(f"round {r + 1:3d} [{time.time() - t0:5.1f}s] " + " | ".join(line))
             if ckpt and (r + 1) % rt.checkpoint_every == 0:
@@ -725,21 +770,14 @@ class ArchSyncEngine:
                         self.population.config_record()
                 if self.incentive is not None:
                     coord_payload["incentive"] = self.incentive.state_dict()
-                ckpt.save(
-                    r + 1,
-                    task_state,
-                    coordinator_state={
-                        **coord_payload,
-                        "history": {
-                            "loss": [list(x) for x in loss_hist],
-                            "counts": [list(x) for x in count_hist],
-                            "alloc": [np.asarray(x).tolist() for x in alloc_hist],
-                            "acc": [list(x) for x in acc_hist],
-                            "wall_clock": [float(x) for x in clock_hist],
-                        },
-                    },
-                )
+                # NOTE: no history in the step payload — the whole-run
+                # curves live in the sidecar (O(1) checkpoint size)
+                ckpt.save(r + 1, task_state,
+                          coordinator_state=coord_payload,
+                          engine_kind="sync")
 
+        if ckpt is not None:
+            ckpt.close()
         counts = np.array(count_hist, np.int64).reshape(-1, len(self.names))
         # resumed runs from pre-accuracy checkpoints have a partial curve;
         # report accuracy only when it covers every round

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointManager,
+    ResumeState,
     load_pytree,
     save_pytree,
 )

@@ -43,10 +43,14 @@ Two state-management seams close the loop for LONG runs:
     and emits the per-task thresholds; ``static`` (the default) is the
     bit-exact legacy single knob;
   - mid-run CHECKPOINTING: ``state_dict``/``load_state`` serialise the
-    complete engine state — event queue, buffers, retained model
+    BOUNDED engine state — event queue, buffers, retained model
     versions, RNG streams, policy/incentive/controller state — through
-    ``checkpoint/checkpoint.py``, so a resumed run (``AsyncConfig.resume``)
-    is event-for-event identical to an uninterrupted one.
+    ``checkpoint/checkpoint.py``, while the whole-run history (flush
+    records + dispatch log) streams into the append-only
+    ``history.jsonl`` sidecar, committed by offset with each step: the
+    per-step payload is O(1) in run length, and a resumed run
+    (``AsyncConfig.resume``) replays the sidecar and continues
+    event-for-event identical to an uninterrupted one.
 """
 from __future__ import annotations
 
@@ -415,6 +419,9 @@ class AsyncMMFLEngine:
         self.aggregator = aggregator_from_config(
             cfg.aggregator, cfg.aggregator_options, backend=self.backend)
         self._has_acc = all(hasattr(t, "accuracy") for t in self.tasks)
+        # the active CheckpointManager (None when checkpointing is off):
+        # _dispatch/_flush stream their history records through it
+        self._ckpt = None
 
     @classmethod
     def from_fed_tasks(cls, tasks: Sequence[FedTask], cfg: AsyncConfig,
@@ -435,6 +442,12 @@ class AsyncMMFLEngine:
         if slot[1] == 0:
             del self._retained[s][version]
 
+    def _record(self, rec: dict) -> None:
+        """Append one history record to the checkpoint sidecar (buffered;
+        committed by the next save — see checkpoint/checkpoint.py)."""
+        if self._ckpt is not None:
+            self._ckpt.append_history(rec)
+
     def _dispatch(self, client: int, t: float):
         s = self.coord.assign_next(client)
         if s is None:
@@ -442,6 +455,8 @@ class AsyncMMFLEngine:
         v = self._version[s]
         self._retain(s, v, self._params[s])
         self._assignments.append((client, s))
+        self._record({"kind": "assign", "client": int(client),
+                      "task": int(s)})
         # the arrival process may defer the job's start (off-window /
         # partial participation); the model version is pinned at dispatch.
         # The cost model turns the base work/speed duration into the
@@ -472,6 +487,8 @@ class AsyncMMFLEngine:
             v = self._version[s]
             self._retain(s, v, self._params[s])
             self._assignments.append((int(i), s))
+            self._record({"kind": "assign", "client": int(i),
+                          "task": int(s)})
             assigned.append((int(i), s, v))
         if not assigned:
             return
@@ -594,6 +611,13 @@ class AsyncMMFLEngine:
             self._hist_metric.append(self._metric.copy())
             self._hist_stale.append(stale_mean)
             self._hist_bufsz.append(self._buffer_sizes.copy())
+            rec = {"kind": "flush", "time": float(t), "task": int(s),
+                   "metric": [float(x) for x in self._metric],
+                   "stale": float(stale_mean),
+                   "buffer_sizes": [int(x) for x in self._buffer_sizes]}
+            if self._has_acc:
+                rec["acc"] = [float(x) for x in self._acc]
+            self._record(rec)
 
     # -- checkpoint state --------------------------------------------------
 
@@ -658,17 +682,23 @@ class AsyncMMFLEngine:
                     bool(p[4]) if len(p) > 4 else False)
 
     def state_dict(self) -> Dict:
-        """The COMPLETE control state of a mid-run engine, JSON-native:
+        """The BOUNDED control state of a mid-run engine, JSON-native:
         virtual-time event queue (in-flight jobs), per-task buffers,
-        retained-version refcounts, staleness/arrival bookkeeping, the
-        full history so far, both RNG streams (coordinator + arrival
-        process), and the policy / incentive / buffer-controller state.
-        Model pytrees (current params + retained versions) travel
-        separately through ``checkpoint.save_pytree`` — see
-        ``_save_checkpoint``. ``load_state(state_dict(), params)`` then
-        continues event-for-event identically to an uninterrupted run.
-        Layout, atomicity/retention, and the history-growth tradeoff
-        are documented in docs/CHECKPOINTS.md."""
+        retained-version refcounts, staleness/arrival bookkeeping, both
+        RNG streams (coordinator + arrival process), and the policy /
+        incentive / buffer-controller state. Everything that grows with
+        run length — the flush history and the dispatch log — is NOT
+        here: those stream into the append-only ``history.jsonl``
+        sidecar as the run produces them (``_record``), and ``save``
+        commits the sidecar offset with the step, so the per-step
+        payload size is O(1) in run length. Model pytrees (current
+        params + retained versions) travel separately through
+        ``checkpoint.save_pytree`` — see ``_save_checkpoint``.
+        ``load_state(state_dict(), params, history=history_records())``
+        then continues event-for-event identically to an uninterrupted
+        run. Layout, offset-commit semantics, and the legacy
+        embedded-history compat path are documented in
+        docs/CHECKPOINTS.md."""
         state = {
             "processed": int(self._processed),
             "n_flushes": int(self._n_flushes),
@@ -687,18 +717,6 @@ class AsyncMMFLEngine:
                          for r in self._retained],
             "arrivals": self._arrivals.tolist(),
             "per_client": self._per_client.tolist(),
-            "assignments": [[int(c), int(s)]
-                            for c, s in self._assignments],
-            "history": {
-                "time": [float(x) for x in self._hist_time],
-                "task": [int(x) for x in self._hist_task],
-                "metric": [[float(v) for v in m]
-                           for m in self._hist_metric],
-                "stale": [float(x) for x in self._hist_stale],
-                "acc": [[float(v) for v in a] for a in self._hist_acc],
-                "buffer_sizes": [[int(v) for v in b]
-                                 for b in self._hist_bufsz],
-            },
             "buffer_sizes": [int(v) for v in self._buffer_sizes],
             "controller": self.controller.state_dict(),
             # aggregator CONFIG record (name + options); the per-task
@@ -725,10 +743,57 @@ class AsyncMMFLEngine:
             state["incentive"] = self.incentive.state_dict()
         return state
 
-    def load_state(self, state: Dict, task_params: Dict) -> None:
+    def history_records(self) -> List[dict]:
+        """The in-memory history re-expressed as sidecar records (the
+        exact stream ``_record`` would have appended, modulo the
+        assign/flush interleaving — replay partitions by kind, so only
+        within-kind order matters). Used to serialise an engine without
+        a CheckpointManager and to BACKFILL the sidecar after resuming a
+        legacy embedded-history checkpoint."""
+        recs: List[dict] = [{"kind": "assign", "client": int(c),
+                             "task": int(s)}
+                            for c, s in self._assignments]
+        for i in range(len(self._hist_time)):
+            rec = {"kind": "flush",
+                   "time": float(self._hist_time[i]),
+                   "task": int(self._hist_task[i]),
+                   "metric": [float(x) for x in self._hist_metric[i]],
+                   "stale": float(self._hist_stale[i]),
+                   "buffer_sizes": [int(x) for x in self._hist_bufsz[i]]}
+            if i < len(self._hist_acc):
+                rec["acc"] = [float(x) for x in self._hist_acc[i]]
+            recs.append(rec)
+        return recs
+
+    def _replay_history(self, records: Sequence[dict]) -> None:
+        """Rebuild the whole-run history lists (and the dispatch log)
+        from replayed sidecar records, so a resumed run's AsyncHistory
+        covers the entire run — not just the post-resume tail."""
+        self._assignments = [(int(r["client"]), int(r["task"]))
+                             for r in records if r["kind"] == "assign"]
+        self._hist_time, self._hist_task = [], []
+        self._hist_metric, self._hist_stale = [], []
+        self._hist_bufsz, self._hist_acc = [], []
+        for r in records:
+            if r["kind"] != "flush":
+                continue
+            self._hist_time.append(float(r["time"]))
+            self._hist_task.append(int(r["task"]))
+            self._hist_metric.append(np.asarray(r["metric"], np.float64))
+            self._hist_stale.append(float(r["stale"]))
+            self._hist_bufsz.append(np.asarray(r["buffer_sizes"],
+                                               np.int64))
+            if "acc" in r:
+                self._hist_acc.append(np.asarray(r["acc"], np.float64))
+
+    def load_state(self, state: Dict, task_params: Dict,
+                   history: Optional[Sequence[dict]] = None) -> None:
         """Inverse of ``state_dict``. ``task_params`` maps task name ->
         ``{"params": pytree, "retained": {str(version): pytree}}`` as
-        restored by ``CheckpointManager`` (see ``_save_checkpoint``)."""
+        restored by ``CheckpointManager`` (see ``_save_checkpoint``).
+        ``history`` is the replayed sidecar record stream
+        (``ResumeState.history`` / ``history_records()``); omitted for a
+        legacy checkpoint whose state embeds the history directly."""
         self.controller.reset(self.S, self.buffer_size)
         self._processed = int(state["processed"])
         self._n_flushes = int(state["n_flushes"])
@@ -767,17 +832,25 @@ class AsyncMMFLEngine:
                 for v, cnt in state["retained"][s].items()})
         self._arrivals = np.asarray(state["arrivals"], np.int64)
         self._per_client = np.asarray(state["per_client"], np.int64)
-        self._assignments = [(int(c), int(s))
-                             for c, s in state["assignments"]]
-        hist = state["history"]
-        self._hist_time = list(hist["time"])
-        self._hist_task = [int(x) for x in hist["task"]]
-        self._hist_metric = [np.asarray(m, np.float64)
-                             for m in hist["metric"]]
-        self._hist_stale = list(hist["stale"])
-        self._hist_acc = [np.asarray(a, np.float64) for a in hist["acc"]]
-        self._hist_bufsz = [np.asarray(b, np.int64)
-                            for b in hist["buffer_sizes"]]
+        if history is not None:
+            self._replay_history(history)
+        elif "history" in state:
+            # legacy embedded-history payload (pre-sidecar layout):
+            # read-only compat — new checkpoints never write these keys
+            hist = state["history"]
+            self._assignments = [(int(c), int(s))
+                                 for c, s in state["assignments"]]
+            self._hist_time = list(hist["time"])
+            self._hist_task = [int(x) for x in hist["task"]]
+            self._hist_metric = [np.asarray(m, np.float64)
+                                 for m in hist["metric"]]
+            self._hist_stale = list(hist["stale"])
+            self._hist_acc = [np.asarray(a, np.float64)
+                              for a in hist["acc"]]
+            self._hist_bufsz = [np.asarray(b, np.int64)
+                                for b in hist["buffer_sizes"]]
+        else:
+            self._replay_history([])
         self._buffer_sizes = np.asarray(state["buffer_sizes"], np.int64)
         self.controller.load_state(state["controller"])
         self.coord.load_state(state["coordinator"])
@@ -819,7 +892,8 @@ class AsyncMMFLEngine:
             if self._server_state[s] is not None:
                 trees[task.name]["server_state"] = self._server_state[s]
         ckpt.save(self._n_flushes, trees,
-                  coordinator_state={"async": self.state_dict()})
+                  coordinator_state={"async": self.state_dict()},
+                  engine_kind="async")
 
     # -- driver ------------------------------------------------------------
 
@@ -831,18 +905,26 @@ class AsyncMMFLEngine:
             ckpt = CheckpointManager(cfg.checkpoint_dir,
                                      keep=cfg.checkpoint_keep)
         # shared resume preamble (CheckpointManager.begin): resume gate,
-        # foreign-engine guard, stale-step clear. A directly-loaded
-        # engine (load_state with no manager) skips both paths.
+        # foreign-engine guard, sidecar truncation + replay, stale-step
+        # clear. A directly-loaded engine (load_state with no manager)
+        # skips both paths.
         resumed = getattr(self, "_state_loaded", False)
+        self._ckpt = ckpt
         if ckpt is not None:
             hit = ckpt.begin("async", cfg.resume,
                              clear_stale=not resumed)
             if hit is not None:
-                step, trees, coord_state = hit
-                self.load_state(coord_state["async"], trees)
+                self.load_state(hit.coordinator["async"], hit.tasks,
+                                history=hit.history)
                 resumed = True
+                if hit.history is None:
+                    # legacy embedded-history checkpoint: backfill the
+                    # sidecar so the NEXT save commits the full history
+                    # in the new layout (a later resume replays it all)
+                    for rec in self.history_records():
+                        ckpt.append_history(rec)
                 if verbose:
-                    print(f"resumed from flush {step} "
+                    print(f"resumed from flush {hit.step} "
                           f"(arrival {self._processed})")
         if not resumed:
             self._init_state()
@@ -893,6 +975,9 @@ class AsyncMMFLEngine:
                     > flushes_before // cfg.checkpoint_every):
                 self._save_checkpoint(ckpt)
 
+        if ckpt is not None:
+            ckpt.close()
+        self._ckpt = None
         return AsyncHistory(
             time=np.array(self._hist_time),
             task=np.array(self._hist_task, np.int64),

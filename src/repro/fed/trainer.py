@@ -166,6 +166,17 @@ class TrainConfig:
     # the legacy per-client state, "vectorized" is bit-exact with it
     population: Optional[str] = None
     population_options: dict = field(default_factory=dict)
+    # mid-run checkpointing (checkpoint/checkpoint.py, engine kind
+    # "sync_fed"): every `checkpoint_every` rounds the bounded state
+    # (params, policy/incentive/aggregator/cost-model state, RNG) is
+    # saved while the round curves stream into the append-only
+    # history.jsonl sidecar; resume=True restores the latest step,
+    # replays the sidecar, and continues round-for-round identically
+    # to an uninterrupted run
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 10
+    checkpoint_keep: int = 3
+    resume: bool = False
 
 
 @dataclass
@@ -316,7 +327,55 @@ class MMFLTrainer:
             accs[s] = float(accuracy(params[s], t.test_x, t.test_y))
         acc_hist, alloc_hist, assign_hist, clock_hist = [], [], [], []
         need_norms = getattr(self.policy, "wants_update_norms", False)
-        for r in range(cfg.rounds):
+        ckpt, start_round = None, 0
+        if cfg.checkpoint_dir:
+            from repro.checkpoint import CheckpointManager
+            if len(set(self._names)) != len(self._names):
+                raise ValueError(
+                    "checkpointing keys task pytrees by name; rename "
+                    f"the duplicated tasks in {self._names!r} (e.g. "
+                    "'synth-mnist#1') or drop checkpoint_dir")
+            ckpt = CheckpointManager(cfg.checkpoint_dir,
+                                     keep=cfg.checkpoint_keep)
+            # shared resume preamble (CheckpointManager.begin): resume
+            # gate, foreign-engine guard, sidecar truncation + replay,
+            # stale-step clear
+            hit = ckpt.begin("sync_fed", cfg.resume)
+            if hit is not None:
+                coord = hit.coordinator
+                for s, t in enumerate(self.tasks):
+                    tree = hit.tasks[t.name]
+                    params[s] = jax.tree.map(jnp.asarray, tree["params"])
+                    srv = tree.get("server_state")
+                    server_state[s] = (
+                        jax.tree.map(jnp.asarray, srv)
+                        if srv is not None
+                        else self.aggregator.init(params[s]))
+                self.aggregator.load_state(coord["aggregator"])
+                self.policy.load_state(coord["policy"])
+                self.elig = self._set_elig(
+                    np.asarray(coord["eligibility"], bool))
+                if self.incentive is not None and "incentive" in coord:
+                    self.incentive.load_state(coord["incentive"])
+                if self.population is not None and "population" in coord:
+                    self.population.validate_config(coord["population"])
+                rng.bit_generator.state = coord["rng"]
+                self.cost_model.load_state(coord["cost_model"])
+                accs = np.asarray(coord["accs"], np.float64)
+                clock = float(coord["clock"])
+                # replayed sidecar records rebuild the pre-checkpoint
+                # curves, so the History covers the WHOLE run
+                for rec in hit.history or []:
+                    if rec.get("kind") != "round":
+                        continue
+                    acc_hist.append(np.asarray(rec["acc"], np.float64))
+                    alloc_hist.append(np.asarray(rec["counts"], np.int64))
+                    assign_hist.append(np.asarray(rec["alloc"], np.int64))
+                    clock_hist.append(float(rec["wall_clock"]))
+                start_round = hit.step
+                if verbose:
+                    print(f"resumed from round {hit.step}")
+        for r in range(start_round, cfg.rounds):
             losses = np.maximum(1.0 - accs, 1e-6)   # paper: use test acc
             if self.incentive is not None:
                 upd = self.incentive.recruit(RoundContext(
@@ -373,10 +432,49 @@ class MMFLTrainer:
             assign_hist.append(alloc.copy())
             clock += round_time
             clock_hist.append(clock)
+            if ckpt is not None:
+                # round curves stream into the append-only sidecar
+                # (buffered; the next save fsyncs + commits the offset)
+                ckpt.append_history({
+                    "kind": "round",
+                    "acc": [float(a) for a in accs],
+                    "counts": [int(c) for c in counts],
+                    "alloc": [int(x) for x in alloc],
+                    "wall_clock": float(clock),
+                })
+                if (cfg.checkpoint_every > 0
+                        and (r + 1) % cfg.checkpoint_every == 0):
+                    trees = {}
+                    for s2, t2 in enumerate(self.tasks):
+                        trees[t2.name] = {"params": params[s2]}
+                        if server_state[s2] is not None:
+                            trees[t2.name]["server_state"] = \
+                                server_state[s2]
+                    coord_payload = {
+                        "policy": self.policy.state_dict(),
+                        "eligibility": np.asarray(self.elig,
+                                                  bool).tolist(),
+                        "rng": rng.bit_generator.state,
+                        "accs": [float(a) for a in accs],
+                        "clock": float(clock),
+                        "aggregator": self.aggregator.state_dict(),
+                        "cost_model": self.cost_model.state_dict(),
+                    }
+                    if self.population is not None:
+                        coord_payload["population"] = \
+                            self.population.config_record()
+                    if self.incentive is not None:
+                        coord_payload["incentive"] = \
+                            self.incentive.state_dict()
+                    ckpt.save(r + 1, trees,
+                              coordinator_state=coord_payload,
+                              engine_kind="sync_fed")
             if verbose and (r + 1) % 10 == 0:
                 print(f"  round {r+1:4d} accs="
                       + " ".join(f"{a:.3f}" for a in accs)
                       + f" min={accs.min():.3f}")
+        if ckpt is not None:
+            ckpt.close()
         self.params = params    # final per-task models (RunResult parity)
         return History(np.array(acc_hist), np.array(alloc_hist),
                        alloc=np.array(assign_hist),

@@ -1,8 +1,110 @@
 import os
 import sys
 
+import pytest
+
 # src layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # Keep tests on ONE device: the 512-device flag belongs to dryrun.py only.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+class FaultyFS:
+    """Fault injection over the checkpoint module's durable-write seam
+    (``repro.checkpoint.checkpoint._os_write/_os_fsync/_os_replace/
+    _os_rename``) — every write point the crash-safety story depends on
+    routes through those four indirections.
+
+    Every call is recorded as an ``(op, path)`` label in ``self.ops``;
+    ``arm(i)`` makes the i-th op of the NEXT run raise ``FaultyFS.Fault``
+    (the simulated SIGKILL: the caller abandons the run, then a fresh
+    process resumes from whatever landed on disk). An armed write op
+    first flushes HALF its bytes, so the sweep also exercises torn lines
+    and truncated files — the state a real kill mid-``write(2)`` leaves.
+    Checkpoint writes are deterministic for a fixed config, so op
+    indices line up between a recording dry run and the armed runs.
+
+    ``Fault`` is deliberately NOT an OSError: no ``except OSError``
+    recovery path in production code may swallow the simulated kill.
+    """
+
+    class Fault(Exception):
+        pass
+
+    _NAMES = ("_os_write", "_os_fsync", "_os_replace", "_os_rename")
+
+    def __init__(self, monkeypatch):
+        import repro.checkpoint.checkpoint as ckpt_mod
+
+        self._real = {n: getattr(ckpt_mod, n) for n in self._NAMES}
+        self.ops = []
+        self._arm_at = None
+        self._partial = True
+        monkeypatch.setattr(ckpt_mod, "_os_write", self._write)
+        monkeypatch.setattr(ckpt_mod, "_os_fsync", self._fsync)
+        monkeypatch.setattr(ckpt_mod, "_os_replace", self._replace)
+        monkeypatch.setattr(ckpt_mod, "_os_rename", self._rename)
+
+    # ---------------------------------------------------- sweep control
+
+    def arm(self, index, partial=True):
+        """Fail the ``index``-th (0-based) op of the next run; write ops
+        land half their bytes first unless ``partial=False``."""
+        self.ops = []
+        self._arm_at = index
+        self._partial = partial
+
+    def disarm(self):
+        self.ops = []
+        self._arm_at = None
+
+    def dry_run(self, fn):
+        """Run ``fn`` recording-only and return its op-label list."""
+        self.disarm()
+        fn()
+        ops, self.ops = self.ops, []
+        return ops
+
+    # ------------------------------------------------------------- seam
+
+    @staticmethod
+    def _fd_path(fd):
+        try:
+            return os.readlink(f"/proc/self/fd/{fd}")
+        except OSError:  # pragma: no cover - non-procfs platforms
+            return f"<fd {fd}>"
+
+    def _fire(self, label):
+        idx = len(self.ops)
+        self.ops.append(label)
+        return self._arm_at is not None and idx == self._arm_at
+
+    def _write(self, fd, data):
+        if self._fire(("write", self._fd_path(fd))):
+            if self._partial and len(data) > 1:
+                self._real["_os_write"](fd, bytes(data)[: len(data) // 2])
+            raise self.Fault(f"injected at write #{len(self.ops) - 1}")
+        return self._real["_os_write"](fd, data)
+
+    def _fsync(self, fd):
+        if self._fire(("fsync", self._fd_path(fd))):
+            raise self.Fault(f"injected at fsync #{len(self.ops) - 1}")
+        return self._real["_os_fsync"](fd)
+
+    def _replace(self, src, dst):
+        if self._fire(("replace", str(dst))):
+            raise self.Fault(f"injected at replace #{len(self.ops) - 1}")
+        return self._real["_os_replace"](src, dst)
+
+    def _rename(self, src, dst):
+        if self._fire(("rename", str(dst))):
+            raise self.Fault(f"injected at rename #{len(self.ops) - 1}")
+        return self._real["_os_rename"](src, dst)
+
+
+@pytest.fixture
+def faulty_fs(monkeypatch):
+    """Checkpoint-write fault injection (tests/test_crash_injection.py);
+    monkeypatch restores the real os functions on teardown."""
+    return FaultyFS(monkeypatch)

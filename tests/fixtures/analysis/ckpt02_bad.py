@@ -1,0 +1,52 @@
+"""CKPT02 fixture: run-length-proportional history embedded in step
+payloads — the pre-sidecar layout the O(1) contract forbids."""
+
+
+class EmbeddingEngine:
+    def __init__(self):
+        self._hist_loss = []
+        self._hist_time = []
+        self.flushes = 0
+
+    def _flush(self, loss, t):
+        self._hist_loss.append(loss)
+        self._hist_time.append(t)
+        self.flushes += 1
+
+    def state_dict(self):
+        # BAD: whole-run curves in the bounded payload
+        return {"flushes": self.flushes,
+                "history": {"loss": [float(x) for x in self._hist_loss],
+                            "time": list(self._hist_time)}}
+
+    def load_state(self, state):
+        self.flushes = state["flushes"]
+        self._hist_loss = list(state["history"]["loss"])
+        self._hist_time = list(state["history"]["time"])
+
+
+class SavingEngine:
+    def __init__(self, ckpt):
+        self._ckpt = ckpt
+        self._rows = []
+
+    def run(self, rounds):
+        loss_hist = []
+        for r in range(rounds):
+            loss_hist.append(float(r))
+            self._rows.append([r, r])
+            # BAD: local accumulator embedded in the save payload
+            self._ckpt.save(r, {"t": {}}, coordinator_state={
+                "loss_curve": loss_hist,
+                "rows": list(self._rows),
+            })
+
+
+def run_legacy(ckpt, rounds):
+    curves = []
+    for r in range(rounds):
+        curves.append(r * 0.5)
+        payload = {}
+        # BAD: the legacy embedded-history layout is write-forbidden
+        payload["history"] = {"loss": curves}
+        ckpt.save(r, {"t": {}}, payload)

@@ -1,0 +1,47 @@
+"""CKPT02 fixture: the sanctioned patterns — bounded payloads, sidecar
+appends for the growing curves, bounded derivations of accumulators."""
+
+
+class SidecarEngine:
+    def __init__(self, ckpt):
+        self._ckpt = ckpt
+        self._hist_loss = []
+        self.flushes = 0
+
+    def _flush(self, loss):
+        self._hist_loss.append(loss)
+        self.flushes += 1
+        # growth streams through the sidecar, not the payload
+        self._ckpt.append_history({"kind": "flush", "loss": float(loss)})
+
+    def state_dict(self):
+        # bounded: counters, len(), scalar last-value picks
+        return {"flushes": self.flushes,
+                "n_records": len(self._hist_loss),
+                "last_loss": self._hist_loss[-1] if self._hist_loss else None}
+
+    def load_state(self, state):
+        self.flushes = state["flushes"]
+
+    def history_records(self):
+        # NOT state_dict: rebuilding sidecar records from the curves is
+        # exactly how legacy checkpoints are backfilled
+        return [{"kind": "flush", "loss": float(x)}
+                for x in self._hist_loss]
+
+    def save(self, step):
+        self._ckpt.save(step, {"t": {}}, coordinator_state={
+            "flushes": self.flushes,
+            "last_loss": self._hist_loss[-1] if self._hist_loss else None,
+        }, engine_kind="async")
+
+
+def run(ckpt, rounds):
+    clock_hist = []
+    for r in range(rounds):
+        clock_hist.append(float(r))
+        ckpt.append_history({"kind": "round", "wall_clock": clock_hist[-1]})
+        ckpt.save(r, {"t": {}}, coordinator_state={
+            "clock": clock_hist[-1],
+            "rounds_done": len(clock_hist),
+        }, engine_kind="sync")

@@ -19,7 +19,8 @@ REPO = Path(__file__).resolve().parents[1]
 FIXTURES = REPO / "tests" / "fixtures" / "analysis"
 FIXTURE_DOC = FIXTURES / "registry_doc.md"
 
-ALL_CODES = ("CKPT01", "DOC01", "JIT01", "JIT02", "RNG01", "RNG02", "RP01")
+ALL_CODES = ("CKPT01", "CKPT02", "DOC01", "JIT01", "JIT02", "RNG01",
+             "RNG02", "RP01")
 
 
 def scan(stem, codes):
@@ -72,6 +73,7 @@ def test_finding_fingerprint_ignores_line_numbers():
     ("jit01", "JIT01", 5),
     ("jit02", "JIT02", 3),
     ("ckpt01", "CKPT01", 1),
+    ("ckpt02", "CKPT02", 4),
     ("doc01", "DOC01", 1),
 ])
 def test_rule_fixtures(stem, code, min_bad):
@@ -117,6 +119,19 @@ def test_jit02_closure_and_global_mutation():
 def test_ckpt01_names_the_dropped_key():
     (f,) = scan("ckpt01_bad", ["CKPT01"])
     assert "'rng_state'" in f.message and "never reads" in f.message
+
+
+def test_ckpt02_finding_kinds():
+    """The three regression shapes: whole-run curves in state_dict, an
+    accumulator (attr or local) in a save() payload, and the legacy
+    embedded 'history' key write."""
+    msgs = "\n".join(f.message for f in scan("ckpt02_bad", ["CKPT02"]))
+    assert "state_dict embeds the unbounded accumulator self._hist_loss" \
+        in msgs
+    assert "key 'loss_curve' embeds the unbounded accumulator loss_hist" \
+        in msgs
+    assert "key 'rows' embeds the unbounded accumulator self._rows" in msgs
+    assert "legacy 'history' key" in msgs
 
 
 def test_doc01_undocumented_key():

@@ -131,7 +131,9 @@ def test_async_resume_preserves_controller_trajectory(controller, options,
 def test_async_engine_state_dict_json_roundtrip_continues_exactly():
     """Engine-level (no disk): serialising a mid-run engine through
     actual JSON text and loading into a FRESH engine continues with an
-    identical event stream."""
+    identical event stream. ``state_dict`` carries only the BOUNDED
+    control state; the whole-run history travels as the sidecar record
+    stream (``history_records()``) — both through real JSON text."""
     from repro.api import TASK_FAMILIES
 
     fam = TASK_FAMILIES.get("synthetic")()
@@ -145,13 +147,17 @@ def test_async_engine_state_dict_json_roundtrip_continues_exactly():
     half.engine.cfg.total_arrivals = 9
     half.run()
     state = json.loads(json.dumps(half.engine.state_dict()))
+    # the step payload must stay free of run-length-proportional keys
+    # (the CKPT02 invariant): history and dispatch log ride separately
+    assert "history" not in state and "assignments" not in state
+    records = json.loads(json.dumps(half.engine.history_records()))
     trees = {t.name: {"params": half.engine._params[s],
                       "retained": {str(v): slot[0] for v, slot in
                                    half.engine._retained[s].items()}}
              for s, t in enumerate(half.engine.tasks)}
 
     rest = fam.async_engine(async_spec(total_arrivals=18))
-    rest.engine.load_state(state, trees)
+    rest.engine.load_state(state, trees, history=records)
     resumed = rest.run()
     np.testing.assert_array_equal(full.loss, resumed.loss)
     np.testing.assert_array_equal(full.time, resumed.time)
